@@ -1,0 +1,28 @@
+"""FaTRQ storage/traffic across the 10 assigned backbones' embedding
+dims (DESIGN.md §4): the retriever is architecture-agnostic — this table
+shows the far-memory record size and SSD-byte saving at each arch's
+hidden size (what a RAG deployment of that backbone would store).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import ARCHS
+from repro.core.packing import storage_bytes
+from repro.quant import sq as sq_mod
+
+
+def run() -> None:
+    for name in sorted(ARCHS):
+        cfg = ARCHS[name]
+        d = cfg.d_model
+        fatrq = storage_bytes(d)
+        sq4 = sq_mod.sq_bytes_per_record(d, 4)
+        full = 4 * d
+        emit(f"archdim_{name}", 0.0,
+             f"d={d};fatrq_B={fatrq};sq4_B={sq4};full_B={full};"
+             f"vs_sq4={sq4 / fatrq:.2f}x;vs_full={full / fatrq:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks (interpret mode on CPU — correctness-path
+timing; real TPU timing comes from the roofline analysis) + the kernel's
+HBM-traffic advantage, which is hardware-independent arithmetic.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.core.packing import pack_ternary, packed_size
+from repro.core.ternary import ternary_encode
+from repro.kernels.ops import adc_scores, refine_scores
+
+
+def run(c: int = 4096, d: int = 768) -> None:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (c, d))
+    delta = 0.2 * jax.random.normal(ks[1], (c, d))
+    tc = ternary_encode(delta)
+    packed = pack_ternary(tc.code)
+    q = jax.random.normal(ks[2], (d,))
+    d0 = jnp.abs(jax.random.normal(ks[3], (c,)))
+    zeros = jnp.zeros((c,))
+    w = jnp.asarray([1.0, 1.0, 1.0, 2.0])
+
+    us = time_call(refine_scores, packed, q, d0, zeros, zeros, tc.norm,
+                   tc.rho, w, jnp.asarray(0.0), iters=3)
+    emit("kernel_ternary_refine_us", us, f"candidates={c};dim={d}")
+
+    codes = jax.random.randint(key, (c, 96), 0, 256).astype(jnp.uint8)
+    lut = jax.random.uniform(ks[1], (96, 256))
+    us = time_call(adc_scores, codes, lut, iters=3)
+    emit("kernel_pq_adc_us", us, f"candidates={c};m=96")
+
+    # HBM traffic per candidate: packed ternary vs full-precision fetch
+    far = packed_size(d) + 20
+    full = d * 4
+    emit("kernel_refine_hbm_bytes_per_cand", 0.0,
+         f"fatrq={far};full_fetch={full};saving={full / far:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

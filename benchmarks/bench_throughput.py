@@ -1,0 +1,98 @@
+"""Fig. 6 — end-to-end throughput: FaTRQ-SW / FaTRQ-HW vs SSD-rerank
+baseline, on IVF and CAGRA front stages, at matched recall.
+
+Absolute times come from the Table-I tier cost model (the container has no
+CXL/SSD on the hot path — same methodology as the paper's Ramulator +
+datasheet simulation).  -SW places residual codes in CXL memory with host
+filtering (codes cross the CXL link, host CPU scores them); -HW offloads
+filtering into the CXL Type-2 accelerator (device-local access, 3.7×
+faster filtering per §V-B, only 4 B coarse distances + survivor ids cross
+the link).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import dataset, emit, fatrq_index
+from repro.anns import baseline_search, recall_at_k, search
+from repro.index import graph
+from repro.memory import QueryCost, Tier
+
+# host-CPU vs accelerator per-candidate filtering cost (calibrated to the
+# paper's "filtering up to 3.7× faster" §V-B; 40-thread Xeon scoring a
+# 154 B ternary code ≈ 45 ns/candidate amortized)
+_SW_NS_PER_CAND = 45.0
+_HW_NS_PER_CAND = 45.0 / 3.7
+
+
+def _fatrq_cost(index, queries, *, hw: bool) -> tuple[float, QueryCost]:
+    pred, cost = search(index, queries, k=10)
+    rec = recall_at_k(pred, dataset().gt, 10)
+    # replace the generic compute estimate with the mode-specific one
+    total_cand = sum(t.accesses for k_, t in cost.ledger.items()
+                     if k_.startswith("refine"))
+    cost.compute_s = total_cand * (
+        _HW_NS_PER_CAND if hw else _SW_NS_PER_CAND) * 1e-9
+    if hw:
+        # -HW: codes never cross the CXL link to the host; scoring happens
+        # in-device.  Model: refine traffic billed at device-internal DRAM
+        # timing instead of the host-visible CXL link.
+        for key in list(cost.ledger):
+            if key.startswith("refine:cxl"):
+                t = cost.ledger.pop(key)
+                cost.ledger[key.replace("cxl", "dram")] = t
+    return rec, cost
+
+
+def run() -> None:
+    ds, index = fatrq_index()
+    q = ds.queries
+
+    # --- IVF front stage
+    base_pred, base_cost = baseline_search(index, q, k=10)
+    base_rec = recall_at_k(base_pred, ds.gt, 10)
+    t_base = base_cost.total_seconds()
+
+    rec_sw, cost_sw = _fatrq_cost(index, q, hw=False)
+    rec_hw, cost_hw = _fatrq_cost(index, q, hw=True)
+    t_sw, t_hw = cost_sw.total_seconds(), cost_hw.total_seconds()
+
+    nq = q.shape[0]
+    emit("fig6_ivf_baseline_qps", t_base / nq * 1e6,
+         f"recall={base_rec:.3f}")
+    emit("fig6_ivf_fatrq_sw_qps", t_sw / nq * 1e6,
+         f"recall={rec_sw:.3f};speedup={t_base / t_sw:.2f}x")
+    emit("fig6_ivf_fatrq_hw_qps", t_hw / nq * 1e6,
+         f"recall={rec_hw:.3f};speedup={t_base / t_hw:.2f}x;"
+         f"hw_over_sw={t_sw / t_hw:.2f}x")
+
+    # --- CAGRA-style graph front stage (fewer candidates → smaller gain,
+    # matching the paper's IVF-vs-CAGRA ordering)
+    g = graph.build(ds.x, degree=16)
+    cand = graph.search_batch(g, ds.x, q, iters=32, beam=64)
+
+    lay = index.layout
+    nq_cand = int(np.prod(cand.shape))
+    cost_gb = QueryCost()
+    cost_gb.record("coarse", Tier.HBM, nq_cand, lay.fast_bytes)
+    cost_gb.record("rerank", Tier.SSD, nq_cand, lay.ssd_bytes)
+    t_gbase = cost_gb.total_seconds()
+
+    # FaTRQ on the graph candidates: level-0 stream + budgeted SSD fetches
+    budget = index.config.refine_budget or 40
+    cost_gf = QueryCost()
+    cost_gf.record("coarse", Tier.HBM, nq_cand, lay.fast_bytes)
+    cost_gf.record("handoff", Tier.CXL, nq_cand, 4)
+    cost_gf.record("refine", Tier.CXL, nq_cand, lay.far_bytes)
+    cost_gf.record("rerank", Tier.SSD, budget * q.shape[0], lay.ssd_bytes)
+    cost_gf.compute_s = nq_cand * _HW_NS_PER_CAND * 1e-9
+    t_gf = cost_gf.total_seconds()
+    emit("fig6_cagra_baseline_qps", t_gbase / nq * 1e6, "")
+    emit("fig6_cagra_fatrq_hw_qps", t_gf / nq * 1e6,
+         f"speedup={t_gbase / t_gf:.2f}x")
+
+
+if __name__ == "__main__":
+    run()

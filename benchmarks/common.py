@@ -1,0 +1,50 @@
+"""Shared benchmark setup: datasets, indexes, timing helpers, CSV output."""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.anns import PipelineConfig, build
+from repro.data import make_dataset
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in µs (blocks on jax results)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+@functools.lru_cache(maxsize=4)
+def dataset(n: int = 20_000, d: int = 128, nq: int = 64):
+    return make_dataset(jax.random.PRNGKey(0), n=n, d=d, n_queries=nq,
+                        k_gt=100, clusters=64)
+
+
+@functools.lru_cache(maxsize=4)
+def fatrq_index(n: int = 20_000, d: int = 128, *, budget: int = 40,
+                bound: str = "cauchy"):
+    ds = dataset(n, d)
+    cfg = PipelineConfig(dim=d, pq_m=d // 8, pq_k=256, nlist=64, nprobe=8,
+                         final_k=10, refine_budget=budget, bound=bound)
+    return ds, build(jax.random.PRNGKey(1), ds.x, cfg)

@@ -1,0 +1,32 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_arch_dims, bench_distortion,
+                            bench_kernels, bench_refinement, bench_storage,
+                            bench_throughput)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in [bench_storage, bench_arch_dims, bench_kernels,
+                bench_distortion, bench_throughput, bench_refinement]:
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"# FAILED {mod.__name__}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: build a FaTRQ index and run progressive-refinement search.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.anns import PipelineConfig, baseline_search, build, recall_at_k, \
+    search
+from repro.data import make_dataset
+
+
+def main():
+    print("generating synthetic embedding dataset (20k × 128d)...")
+    ds = make_dataset(jax.random.PRNGKey(0), n=20_000, d=128,
+                      n_queries=64, k_gt=100)
+
+    cfg = PipelineConfig(dim=128, pq_m=16, pq_k=256, nlist=64, nprobe=8,
+                         final_k=10, refine_budget=40, bound="cauchy")
+    print("building index (PQ → IVF → TRQ encode → calibration)...")
+    index = build(jax.random.PRNGKey(1), ds.x, cfg)
+    print(f"  far-memory layout: {index.layout.describe()} bytes/record")
+
+    print("searching (FaTRQ progressive refinement)...")
+    pred, cost = search(index, ds.queries, k=10)
+    rec = recall_at_k(pred, ds.gt, 10)
+
+    base_pred, base_cost = baseline_search(index, ds.queries, k=10)
+    base_rec = recall_at_k(base_pred, ds.gt, 10)
+
+    ssd = sum(t.accesses for k, t in cost.ledger.items()
+              if k.endswith("ssd"))
+    ssd_b = sum(t.accesses for k, t in base_cost.ledger.items()
+                if k.endswith("ssd"))
+    print(f"\n  recall@10: FaTRQ={rec:.3f}  baseline={base_rec:.3f}")
+    print(f"  SSD fetches/query: FaTRQ={ssd / 64:.1f}  "
+          f"baseline={ssd_b / 64:.1f}  ({ssd_b / max(ssd, 1):.1f}x fewer)")
+    print(f"  modeled time/query: FaTRQ={cost.total_seconds() / 64 * 1e6:.0f}us"
+          f"  baseline={base_cost.total_seconds() / 64 * 1e6:.0f}us"
+          f"  ({base_cost.total_seconds() / cost.total_seconds():.1f}x faster)")
+
+
+if __name__ == "__main__":
+    main()

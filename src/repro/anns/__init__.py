@@ -1,0 +1,5 @@
+from repro.anns.pipeline import (FaTRQIndex, PipelineConfig, baseline_search,
+                                 build, recall_at_k, search)
+
+__all__ = ["FaTRQIndex", "PipelineConfig", "baseline_search", "build",
+           "recall_at_k", "search"]

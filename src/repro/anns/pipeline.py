@@ -1,0 +1,205 @@
+"""FaTRQ-augmented ANNS pipeline (paper Fig. 5).
+
+Stages (per query batch):
+  1. front stage  : IVF probe (or graph beam) + PQ-ADC coarse distances —
+                    fast-memory traffic (HBM on the accelerator, DRAM on CPU).
+  2. FaTRQ refine : stream packed ternary codes + scalars from FAR memory,
+                    progressive estimate, batched level-wise pruning.
+  3. final rerank : only survivors fetch full-precision vectors ("SSD"),
+                    exact L2, top-k.
+
+Every stage records traffic in a memory.QueryCost ledger; benchmarks turn
+ledgers into throughput via the Table-I tier model.  The baseline pipeline
+(no FaTRQ) reranks the whole candidate list from SSD — the paper's cuVS/
+FAISS comparison point.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import trq as trq_mod
+from repro.core.trq import TRQCodes
+from repro.index import ivf as ivf_mod
+from repro.memory import QueryCost, RecordLayout, Tier
+from repro.quant import pq as pq_mod
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    dim: int = 128
+    pq_m: int = 16
+    pq_k: int = 256
+    nlist: int = 64
+    nprobe: int = 8
+    trq_levels: int = 1
+    final_k: int = 10
+    refine_budget: int | None = None   # max SSD fetches; None → k (tightest)
+    bound: str = "cauchy"              # "cauchy" | "quantile"
+    z: float = 3.0
+    calib_fraction: float = 0.003      # §III-E: ~0.3%
+    calib_pairs_per_sample: int = 8
+
+
+@dataclass
+class FaTRQIndex:
+    config: PipelineConfig
+    codebook: pq_mod.PQCodebook
+    pq_codes: jax.Array          # (N, M) uint8 — fast memory
+    ivf: ivf_mod.IVFIndex
+    trq: TRQCodes                # packed codes + scalars — far memory
+    x: jax.Array                 # (N, D) full precision — "SSD"
+    layout: RecordLayout = field(init=False)
+
+    def __post_init__(self):
+        self.layout = RecordLayout(dim=self.config.dim, pq_m=self.config.pq_m,
+                                   levels=self.config.trq_levels,
+                                   store_rho=(self.config.bound == "cauchy"))
+
+
+def build(key: jax.Array, x: jax.Array, config: PipelineConfig) -> FaTRQIndex:
+    """Offline build: PQ → IVF → TRQ encode → index-driven calibration."""
+    k_pq, k_ivf, k_cal, k_calq = jax.random.split(key, 4)
+    n = x.shape[0]
+
+    codebook = pq_mod.train(k_pq, x, config.pq_m, config.pq_k)
+    pq_codes = pq_mod.encode(codebook, x)
+    x_c = pq_mod.decode(codebook, pq_codes)
+
+    ivf = ivf_mod.build(k_ivf, x, config.nlist)
+    trq, _ = trq_mod.encode_database(x, x_c, num_levels=config.trq_levels)
+
+    # Calibration pairs from the index itself (§III-E): sample records, pair
+    # each with members of its own inverted list (its local boundary).
+    n_samples = max(int(config.calib_fraction * n), 32)
+    samp = jax.random.choice(k_cal, n, (n_samples,), replace=False)
+    list_ids = np.asarray(ivf_mod.assign_lists(ivf, x[samp]))
+    pairs_q, pairs_i = [], []
+    lists_np = np.asarray(ivf.lists)
+    lens_np = np.asarray(ivf.list_len)
+    rng = np.random.default_rng(0)
+    for s, li in zip(np.asarray(samp), list_ids):
+        members = lists_np[li, :max(lens_np[li], 1)]
+        members = members[(members >= 0) & (members != s)]  # no self-pairs
+        if members.size == 0:
+            continue
+        take = rng.choice(members, size=min(config.calib_pairs_per_sample,
+                                            members.size), replace=False)
+        for t in take:
+            pairs_q.append(s)
+            pairs_i.append(t)
+    pair_q_idx = jnp.asarray(pairs_q)
+    pair_idx = jnp.asarray(pairs_i)
+    # queries for calibration = sampled records themselves (they sit on each
+    # other's boundaries) with slight perturbation to avoid d=0 degeneracy
+    qs = x[pair_q_idx] + 0.01 * jax.random.normal(k_calq,
+                                                  x[pair_q_idx].shape)
+    trq = trq_mod.calibrate(trq, qs, x, x_c, pair_idx)
+
+    return FaTRQIndex(config=config, codebook=codebook, pq_codes=pq_codes,
+                      ivf=ivf, trq=trq, x=x)
+
+
+# ----------------------------------------------------------------- search
+
+
+@partial(jax.jit, static_argnames=("nprobe", "k", "bound", "z", "budget"))
+def _search_one(q, codebook, pq_codes, ivf, trq, x, *, nprobe, k, bound, z,
+                budget):
+    """Device part of one query: returns (topk_ids, n_cand, n_alive, n_ssd)."""
+    cand = ivf_mod.probe(ivf, q, nprobe=nprobe)               # (C,) w/ -1
+    valid = cand >= 0
+    safe = jnp.maximum(cand, 0)
+
+    table = pq_mod.adc_table(codebook, q)
+    d0 = pq_mod.adc_distances(table, pq_codes[safe])
+    d0 = jnp.where(valid, d0, jnp.inf)
+
+    state = trq_mod.progressive_search(q, d0, trq, safe, k=k, bound=bound,
+                                       z=z)
+    alive = state.alive & valid
+
+    # survivors ranked by refined estimate; cap SSD fetches at `budget`
+    est = jnp.where(alive, state.est, jnp.inf)
+    _, order = jax.lax.top_k(-est, budget)
+    fetch_ids = safe[order]
+    fetch_alive = alive[order]
+    d_exact = jnp.sum((x[fetch_ids] - q[None]) ** 2, axis=-1)
+    d_exact = jnp.where(fetch_alive, d_exact, jnp.inf)
+    _, best = jax.lax.top_k(-d_exact, k)
+    topk = fetch_ids[best]
+    return (topk, jnp.sum(valid), jnp.sum(alive),
+            jnp.minimum(jnp.sum(fetch_alive), budget))
+
+
+def search(index: FaTRQIndex, queries: jax.Array, *, k: int | None = None,
+           cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
+    """Batched FaTRQ search; returns (Q, k) ids + the traffic ledger."""
+    cfg = index.config
+    k = k or cfg.final_k
+    budget = cfg.refine_budget or max(4 * k, 32)
+    run = jax.vmap(lambda q: _search_one(
+        q, index.codebook, index.pq_codes, index.ivf, index.trq, index.x,
+        nprobe=cfg.nprobe, k=k, bound=cfg.bound, z=cfg.z, budget=budget))
+    topk, n_cand, n_alive, n_ssd = run(queries)
+
+    cost = cost or QueryCost()
+    lay = index.layout
+    total_cand = int(jnp.sum(n_cand))
+    total_alive = int(jnp.sum(n_alive))
+    total_ssd = int(jnp.sum(n_ssd))
+    nq = queries.shape[0]
+    # stage 1: PQ codes + LUT from fast memory; 4B coarse distance handoff
+    cost.record("coarse", Tier.HBM, total_cand, lay.fast_bytes)
+    cost.record("handoff", Tier.CXL, total_cand, 4)
+    # stage 2: ALL candidates stream level-0 codes from far memory;
+    # deeper levels only for survivors of the previous level.
+    cost.record("refine", Tier.CXL, total_cand, lay.far_bytes)
+    for lv in range(1, cfg.trq_levels):
+        cost.record("refine", Tier.CXL, total_alive, lay.far_bytes)
+    # stage 3: survivors (≤ budget) hit SSD
+    cost.record("rerank", Tier.SSD, total_ssd, lay.ssd_bytes)
+    cost.add_compute(1e-7 * total_cand)   # ADC+ternary adds (measured scale)
+    return topk, cost
+
+
+def baseline_search(index: FaTRQIndex, queries: jax.Array, *,
+                    k: int | None = None) -> tuple[jax.Array, QueryCost]:
+    """SoTA baseline (cuVS/FAISS style): coarse ADC then rerank the FULL
+    candidate list from SSD — no far-memory refinement."""
+    cfg = index.config
+    k = k or cfg.final_k
+
+    @jax.jit
+    def one(q):
+        cand = ivf_mod.probe(index.ivf, q, nprobe=cfg.nprobe)
+        valid = cand >= 0
+        safe = jnp.maximum(cand, 0)
+        d = jnp.sum((index.x[safe] - q[None]) ** 2, axis=-1)
+        d = jnp.where(valid, d, jnp.inf)
+        _, best = jax.lax.top_k(-d, k)
+        return safe[best], jnp.sum(valid)
+
+    topk, n_cand = jax.vmap(one)(queries)
+    cost = QueryCost()
+    lay = index.layout
+    total = int(jnp.sum(n_cand))
+    cost.record("coarse", Tier.HBM, total, lay.fast_bytes)
+    cost.record("rerank", Tier.SSD, total, lay.ssd_bytes)
+    cost.add_compute(1e-7 * total)
+    return topk, cost
+
+
+def recall_at_k(pred: jax.Array, gt: jax.Array, k: int) -> float:
+    """recall@k with gt (Q, ≥k)."""
+    hits = 0
+    p = np.asarray(pred)[:, :k]
+    g = np.asarray(gt)[:, :k]
+    for i in range(p.shape[0]):
+        hits += len(set(p[i].tolist()) & set(g[i].tolist()))
+    return hits / (p.shape[0] * k)

@@ -1,0 +1,128 @@
+"""Progressive distance estimation with early termination (FaTRQ §III/§IV).
+
+Pipeline per candidate batch:
+  level 0: coarse ADC distance d̂₀ (already computed by the front stage —
+           only 4 bytes/candidate cross the fast↔far boundary, per §IV)
+  level 1: + precomputed scalars (first-order, zero I/O)
+  level 2: + ternary residual estimate of −2⟨q,δ⟩ streamed from far memory
+  ...      deeper TRQ levels, each tightening the estimate
+  final:   survivors fetch full vectors ("SSD") for exact rerank.
+
+Early termination: a candidate is dropped once it is *provably* outside the
+running top-k.  Two bounds:
+
+* ``cauchy`` (provable, needs per-record rho ∈ +4B):  from Eq. (1),
+    ⟨e_q,e_δ⟩ = ⟨e_q,e_c⟩·rho + ||e_q − ⟨e_q,e_c⟩e_c||·⟨e_⊥,e_δ⟩
+  and |⟨e_⊥,e_δ⟩| ≤ sqrt(1 − rho²) exactly (Cauchy–Schwarz in the plane),
+  so  |⟨q,δ⟩ − est| ≤ ||q||·||δ||·sqrt(1−⟨e_q,e_c⟩²)·sqrt(1−rho²).
+* ``quantile`` (paper-faithful storage): margin = z · resid_std from the
+  calibration model; "provably" holds with calibrated confidence.
+
+TPU adaptation: the paper's per-candidate serial early-exit becomes batched
+level-wise pruning — score a whole block at level ℓ, keep a mask of
+survivors, and only survivors contribute far-memory traffic at level ℓ+1.
+(SIMD lanes cannot branch individually; the traffic model accounts for the
+mask, and the Pallas kernel skips fully-pruned blocks.)
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import calibration as calib
+from repro.core.decomposition import RecordScalars
+from repro.core.ternary import ternary_inner
+
+
+class ProgressiveState(NamedTuple):
+    """State carried across refinement levels for one query."""
+
+    est: jax.Array        # (C,) current distance estimate per candidate
+    lo: jax.Array         # (C,) certified lower bound
+    alive: jax.Array      # (C,) bool — still a top-k contender
+    tau: jax.Array        # ()   current top-k threshold (kth best upper bound)
+
+
+def residual_ip_estimate(q: jax.Array, codes: jax.Array, norms: jax.Array,
+                         rho: jax.Array | None = None) -> jax.Array:
+    """Estimate −2⟨q, δ⟩ from ternary codes.
+
+    est(⟨q,δ⟩) = ||q||·||δ||·⟨e_q, e_code⟩·rho  (rho→E[rho] if not stored;
+    the calibration weight on this feature absorbs any constant factor).
+
+    q: (D,), codes: (C, D) int8, norms: (C,) = ||δ||.
+    """
+    qn = jnp.linalg.norm(q)
+    e_q = q / jnp.maximum(qn, 1e-30)
+    align = ternary_inner(codes, e_q)          # ⟨e_q, e_code⟩, (C,)
+    scale = rho if rho is not None else 1.0
+    return -2.0 * qn * norms * align * scale
+
+
+def cauchy_margin(q: jax.Array, codes: jax.Array, norms: jax.Array,
+                  rho: jax.Array) -> jax.Array:
+    """Provable half-width of −2⟨q,δ⟩ around its estimate (see module doc)."""
+    qn = jnp.linalg.norm(q)
+    e_q = q / jnp.maximum(qn, 1e-30)
+    align = ternary_inner(codes, e_q)
+    orth_q = jnp.sqrt(jnp.clip(1.0 - align * align, 0.0, 1.0))
+    orth_d = jnp.sqrt(jnp.clip(1.0 - rho * rho, 0.0, 1.0))
+    return 2.0 * qn * norms * orth_q * orth_d
+
+
+def topk_threshold(estimates: jax.Array, alive: jax.Array, k: int) -> jax.Array:
+    """kth-smallest upper estimate among alive candidates (τ for pruning)."""
+    masked = jnp.where(alive, estimates, jnp.inf)
+    neg_top, _ = jax.lax.top_k(-masked, k)
+    return -neg_top[-1]
+
+
+def refine_level(q: jax.Array, d0: jax.Array, scalars: RecordScalars,
+                 codes: jax.Array, model: calib.CalibrationModel,
+                 *, k: int, bound: str = "cauchy", z: float = 3.0,
+                 prev_alive: jax.Array | None = None) -> ProgressiveState:
+    """One FaTRQ refinement level over a candidate batch (single query).
+
+    Returns estimates, certified lower bounds, the survivor mask after
+    pruning against the updated top-k threshold, and the threshold itself.
+    """
+    c = d0.shape[0]
+    if prev_alive is None:
+        prev_alive = jnp.ones((c,), bool)
+
+    d_ip = residual_ip_estimate(q, codes, scalars.norm, scalars.rho)
+    feats = calib.build_features(d0, d_ip, scalars.delta_sq, scalars.cross)
+    # Calibrated estimate: used for RANKING (the FaTRQ queue order).
+    est = calib.predict(model, feats)
+
+    if bound == "cauchy":
+        # Certified interval centered on the UNCALIBRATED decomposition
+        # identity d̂ = d̂₀ + ||δ||² + 2⟨x_c,δ⟩ + d̂_ip, where the only error
+        # is the residual inner-product term and |err| ≤ cauchy_margin holds
+        # exactly (Cauchy–Schwarz) — pruning against it is provably sound.
+        est_raw = d0 + scalars.delta_sq + 2.0 * scalars.cross + d_ip
+        margin = cauchy_margin(q, codes, scalars.norm, scalars.rho)
+        lo = est_raw - margin
+        hi = est_raw + margin
+    elif bound == "quantile":
+        margin = z * model.resid_std
+        lo = est - margin
+        hi = est + margin
+    else:
+        raise ValueError(f"unknown bound {bound!r}")
+
+    tau = topk_threshold(hi, prev_alive, k)
+    alive = prev_alive & (lo <= tau)
+    return ProgressiveState(est=est, lo=lo, alive=alive, tau=tau)
+
+
+def refine_batch(q: jax.Array, d0: jax.Array, scalars: RecordScalars,
+                 codes: jax.Array, model: calib.CalibrationModel,
+                 *, k: int, bound: str = "cauchy", z: float = 3.0
+                 ) -> ProgressiveState:
+    """Single-level convenience wrapper (the paper's second-order operating
+    point). Multi-level stacking lives in trq.py."""
+    return refine_level(q, d0, scalars, codes, model, k=k, bound=bound, z=z)

@@ -1,0 +1,53 @@
+"""Base-3 packing of ternary codes: 5 trits per byte (FaTRQ §III-D).
+
+``y = Σ_{i=0..4} 3^i (x_i + 1)`` maps 5 values in {-1,0,1} to one byte in
+[0, 242].  1.6 bits/dimension vs the 1.585-bit entropy bound.  768-D →
+⌈768/5⌉ = 154 bytes (+8 bytes scalars = 162 B, the paper's number).
+
+Pure jnp, trailing-axis semantics, jit/vmap-safe.  The Pallas unpack kernel
+(kernels/ternary_pack.py) mirrors ``unpack_ternary`` with div/mod chains.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+TRITS_PER_BYTE = 5
+_POW3 = (1, 3, 9, 27, 81)
+
+
+def packed_size(d: int) -> int:
+    """Bytes needed for a D-dimensional ternary code."""
+    return -(-d // TRITS_PER_BYTE)
+
+
+def pack_ternary(code: jax.Array) -> jax.Array:
+    """Pack int8 trits in {-1,0,1} ``(..., D)`` → uint8 ``(..., ceil(D/5))``.
+
+    Padding trits are 0 (encoded as digit 1), harmless on unpack+truncate.
+    """
+    d = code.shape[-1]
+    g = packed_size(d)
+    pad = g * TRITS_PER_BYTE - d
+    digits = (code.astype(jnp.int32) + 1)
+    if pad:
+        pad_widths = [(0, 0)] * (code.ndim - 1) + [(0, pad)]
+        digits = jnp.pad(digits, pad_widths, constant_values=1)
+    digits = digits.reshape(*code.shape[:-1], g, TRITS_PER_BYTE)
+    weights = jnp.asarray(_POW3, dtype=jnp.int32)
+    return jnp.sum(digits * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_ternary(packed: jax.Array, d: int) -> jax.Array:
+    """Unpack uint8 ``(..., G)`` → int8 trits ``(..., D)`` in {-1,0,1}."""
+    y = packed.astype(jnp.int32)[..., None]  # (..., G, 1)
+    weights = jnp.asarray(_POW3, dtype=jnp.int32)
+    digits = (y // weights) % 3  # (..., G, 5)
+    trits = digits.reshape(*packed.shape[:-1], packed.shape[-1] * TRITS_PER_BYTE)
+    return (trits[..., :d] - 1).astype(jnp.int8)
+
+
+def storage_bytes(d: int, *, n_scalars: int = 2, scalar_bytes: int = 4) -> int:
+    """Per-record far-memory footprint (paper: 768 → 154 + 8 = 162 B)."""
+    return packed_size(d) + n_scalars * scalar_bytes

@@ -1,0 +1,137 @@
+"""Optimal ternary residual-direction encoding (FaTRQ §III-C).
+
+Given a residual vector ``delta``, find the codeword ``c ∈ {-1,0,1}^D``
+whose normalization ``c/||c||`` maximizes the inner product with
+``e_delta = delta/||delta||``.  The paper's key observation: the optimum
+keeps the sign of the ``k*`` largest-magnitude components and zeros the
+rest, where ``k* = argmax_k S_k/sqrt(k)`` over the descending-sorted
+magnitudes' prefix sums ``S_k``.  Exact optimum in O(D log D), no 3^D
+enumeration.
+
+Everything here is pure jnp, jit- and vmap-compatible, and operates on the
+trailing axis so batched inputs ``(..., D)`` work directly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TernaryCode(NamedTuple):
+    """A ternary codeword plus the per-record scalars FaTRQ stores.
+
+    Attributes:
+      code:  int8 ``(..., D)`` with values in {-1, 0, +1}.
+      k:     int32 ``(...,)`` number of nonzeros (``||code||² = k``).
+      rho:   float32 ``(...,)`` alignment ``⟨e_delta, e_code⟩ ∈ [0, 1]``.
+             Not part of the paper's 8-byte metadata (the calibration model
+             absorbs E[rho]); kept optionally for the provable Cauchy–Schwarz
+             pruning bound (see estimator.py).
+      norm:  float32 ``(...,)`` the residual L2 norm ``||delta||``.
+    """
+
+    code: jax.Array
+    k: jax.Array
+    rho: jax.Array
+    norm: jax.Array
+
+
+def optimal_k(sorted_mags: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """``k* = argmax_k S_k / sqrt(k)`` for descending-sorted magnitudes.
+
+    Args:
+      sorted_mags: ``(..., D)`` non-negative, sorted descending on last axis.
+
+    Returns:
+      (k_star ``(...,)`` int32 in [1, D],
+       score  ``(...,)`` the achieved ``S_k*/sqrt(k*) = ⟨e_code, e_delta⟩·||delta||``).
+    """
+    d = sorted_mags.shape[-1]
+    csum = jnp.cumsum(sorted_mags, axis=-1)
+    ks = jnp.arange(1, d + 1, dtype=sorted_mags.dtype)
+    scores = csum / jnp.sqrt(ks)
+    idx = jnp.argmax(scores, axis=-1)
+    k_star = (idx + 1).astype(jnp.int32)
+    best = jnp.take_along_axis(scores, idx[..., None], axis=-1)[..., 0]
+    return k_star, best
+
+
+def ternary_encode(delta: jax.Array) -> TernaryCode:
+    """Encode residual(s) ``delta (..., D)`` into the optimal ternary code."""
+    delta = jnp.asarray(delta)
+    mags = jnp.abs(delta)
+    # Descending sort of magnitudes → prefix-sum scan for k*.
+    sorted_mags = -jnp.sort(-mags, axis=-1)
+    k_star, _ = optimal_k(sorted_mags)
+
+    # rank of each element under descending magnitude (ties broken by index,
+    # deterministically — matches taking "the first k of the sorted list").
+    order = jnp.argsort(-mags, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    mask = ranks < k_star[..., None]
+
+    code = (jnp.sign(delta) * mask).astype(jnp.int8)
+    # Guard sign(0)=0 inside the mask: a zero component contributes nothing
+    # either way, but keep k consistent with the actual nonzero count.
+    k = jnp.sum(jnp.abs(code).astype(jnp.int32), axis=-1)
+
+    norm = jnp.linalg.norm(delta, axis=-1)
+    # rho = <e_delta, code/sqrt(k)> = (Σ selected |delta_i|) / (||delta||·sqrt(k))
+    sel_sum = jnp.sum(mags * mask, axis=-1)
+    safe = jnp.maximum(norm * jnp.sqrt(jnp.maximum(k, 1).astype(delta.dtype)), 1e-30)
+    rho = jnp.where(norm > 0, sel_sum / safe, 0.0)
+    return TernaryCode(code=code, k=k, rho=rho.astype(jnp.float32),
+                       norm=norm.astype(jnp.float32))
+
+
+def ternary_decode_direction(code: jax.Array) -> jax.Array:
+    """Normalized direction ``e_code = code / ||code||`` as float32."""
+    c = code.astype(jnp.float32)
+    k = jnp.sum(c * c, axis=-1, keepdims=True)
+    return c / jnp.sqrt(jnp.maximum(k, 1.0))
+
+
+def reconstruct(tc: TernaryCode) -> jax.Array:
+    """Best L2 approximation of delta in span(e_code): ``||δ||·rho·e_code``.
+
+    Used for stacking levels: the next level encodes ``delta - reconstruct``.
+    """
+    e = ternary_decode_direction(tc.code)
+    return (tc.norm * tc.rho)[..., None] * e
+
+
+def ternary_inner(code: jax.Array, q: jax.Array) -> jax.Array:
+    """``⟨q, e_code⟩`` — the multiplication-free datapath of the paper.
+
+    On TPU this lowers to a sign-select + reduction (or an MXU matmul when
+    batched — see kernels/ternary_refine.py); here it is the reference form.
+    ``code (..., D)`` int8, ``q`` broadcastable ``(..., D)``.
+    """
+    c = code.astype(q.dtype)
+    k = jnp.sum(jnp.abs(c), axis=-1)
+    raw = jnp.sum(c * q, axis=-1)
+    return raw / jnp.sqrt(jnp.maximum(k, 1.0))
+
+
+def brute_force_optimal(delta: jax.Array) -> jax.Array:
+    """Exhaustive 3^D search (tiny D only) — test oracle for optimality."""
+    import itertools
+
+    import numpy as np
+
+    delta = np.asarray(delta)
+    d = delta.shape[-1]
+    assert delta.ndim == 1 and d <= 12, "oracle is for tiny D"
+    best, best_ip = None, -np.inf
+    for c in itertools.product((-1, 0, 1), repeat=d):
+        c = np.array(c, dtype=np.float64)
+        k = (c != 0).sum()
+        if k == 0:
+            continue
+        ip = float(c @ delta) / np.sqrt(k)
+        if ip > best_ip:
+            best_ip, best = ip, c
+    return jnp.asarray(best, dtype=jnp.int8)

@@ -1,0 +1,5 @@
+from repro.data.synthetic import (Dataset, brute_force_topk, make_dataset,
+                                  make_embeddings, make_token_batch)
+
+__all__ = ["Dataset", "brute_force_topk", "make_dataset", "make_embeddings",
+           "make_token_batch"]

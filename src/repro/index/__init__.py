@@ -1,0 +1,3 @@
+from repro.index import graph, ivf
+
+__all__ = ["graph", "ivf"]

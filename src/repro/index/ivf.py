@@ -1,0 +1,73 @@
+"""IVF index (inverted-file) — the paper's primary front stage.
+
+Build: k-means coarse centroids (nlist), assign every record to its nearest
+centroid, materialize fixed-capacity inverted lists (padded with -1 so the
+whole search is jit-able / shard_map-able; padding follows the FAISS
+convention of bounded list length).
+
+Search: rank lists by centroid distance, take nprobe, gather member ids →
+the candidate set handed to PQ-ADC scoring.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant.kmeans import assign, kmeans
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("centroids", "lists", "list_len"), meta_fields=())
+@dataclass(frozen=True)
+class IVFIndex:
+    centroids: jax.Array   # (nlist, D)
+    lists: jax.Array       # (nlist, cap) int32, -1 padded
+    list_len: jax.Array    # (nlist,) int32
+
+    @property
+    def nlist(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def cap(self) -> int:
+        return self.lists.shape[1]
+
+
+def build(key: jax.Array, x: jax.Array, nlist: int, *, iters: int = 20,
+          cap_factor: float = 3.0) -> IVFIndex:
+    """Train centroids and fill inverted lists (host-side fill, device arrays
+    out).  cap = cap_factor × N/nlist bounds skew."""
+    n = x.shape[0]
+    centroids = kmeans(key, x, nlist, iters)
+    ids = np.asarray(assign(x, centroids))
+    cap = int(cap_factor * n / nlist) + 1
+    lists = np.full((nlist, cap), -1, np.int32)
+    lens = np.zeros((nlist,), np.int32)
+    for i, c in enumerate(ids):
+        if lens[c] < cap:
+            lists[c, lens[c]] = i
+            lens[c] += 1
+    return IVFIndex(centroids=jnp.asarray(centroids),
+                    lists=jnp.asarray(lists), list_len=jnp.asarray(lens))
+
+
+@partial(jax.jit, static_argnames=("nprobe",))
+def probe(index: IVFIndex, q: jax.Array, *, nprobe: int) -> jax.Array:
+    """Candidate ids for query q (D,) → (nprobe·cap,) int32 with -1 pads."""
+    d = jnp.sum((index.centroids - q[None]) ** 2, axis=-1)
+    _, top_lists = jax.lax.top_k(-d, nprobe)
+    return index.lists[top_lists].reshape(-1)
+
+
+def probe_batch(index: IVFIndex, qs: jax.Array, *, nprobe: int) -> jax.Array:
+    return jax.vmap(lambda q: probe(index, q, nprobe=nprobe))(qs)
+
+
+def assign_lists(index: IVFIndex, x: jax.Array) -> jax.Array:
+    """Which inverted list each vector belongs to (nearest centroid)."""
+    return assign(x, index.centroids)

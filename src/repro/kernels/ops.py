@@ -1,0 +1,61 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Handle padding to block multiples, build the query digit planes / parameter
+vectors, and dispatch to interpret mode on CPU (the container) vs compiled
+mode on TPU.  The wrappers take the same logical arguments as the pure-jnp
+oracles in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.pq_adc import pq_adc
+from repro.kernels.ternary_refine import ternary_refine
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    c = x.shape[0]
+    pad = (-c) % mult
+    if pad:
+        x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x, c
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def refine_scores(packed: jax.Array, q: jax.Array, d0: jax.Array,
+                  delta_sq: jax.Array, cross: jax.Array, norm: jax.Array,
+                  rho: jax.Array, w: jax.Array, bias: jax.Array,
+                  *, block_c: int = 512) -> jax.Array:
+    """Fused refine over a candidate batch → (C, 3) [est, est_raw, margin].
+
+    Drop-in accelerated form of core.estimator.refine_level's math.
+    """
+    c, g = packed.shape
+    q_planes = ref.make_query_planes(q.astype(jnp.float32), g)
+    scalars = jnp.stack([d0, delta_sq, cross, norm, rho] +
+                        [jnp.zeros_like(d0)] * 3, axis=-1)  # (C, 8)
+    qn = jnp.linalg.norm(q)
+    params = jnp.concatenate([qn[None], w.astype(jnp.float32),
+                              bias[None].astype(jnp.float32),
+                              jnp.zeros((2,), jnp.float32)])[None, :]  # (1,8)
+    packed_p, c0 = _pad_rows(packed, block_c)
+    scalars_p, _ = _pad_rows(scalars.astype(jnp.float32), block_c)
+    out = ternary_refine(packed_p, q_planes, scalars_p, params,
+                         block_c=block_c, interpret=not _ON_TPU)
+    return out[:c0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def adc_scores(codes: jax.Array, lut: jax.Array, *, block_c: int = 128
+               ) -> jax.Array:
+    """PQ-ADC distances for a candidate batch → (C,)."""
+    codes_p, c0 = _pad_rows(codes, block_c)
+    return pq_adc(codes_p, lut.astype(jnp.float32), block_c=block_c,
+                  interpret=not _ON_TPU)[:c0]

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors a kernel in this package exactly (same math, same
+planar packing layout) so tests can assert_allclose kernel-vs-ref across
+shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_POW3 = (1, 3, 9, 27, 81)
+TRITS_PER_BYTE = 5
+
+
+def make_query_planes(q: jax.Array, g: int) -> jax.Array:
+    """Arrange query dims into the (5, G) digit-plane layout: byte g digit i
+    holds dim 5g+i (the paper's §III-D packing order)."""
+    d = q.shape[-1]
+    pad = g * TRITS_PER_BYTE - d
+    qp = jnp.pad(q, (0, pad))
+    return qp.reshape(g, TRITS_PER_BYTE).T            # (5, G)
+
+
+def ternary_refine_ref(packed: jax.Array, q: jax.Array, d0: jax.Array,
+                       delta_sq: jax.Array, cross: jax.Array,
+                       norm: jax.Array, rho: jax.Array,
+                       w: jax.Array, bias: jax.Array) -> jax.Array:
+    """Oracle for the fused refine kernel.
+
+    packed (C, G) uint8, q (D,), per-record scalars (C,), calibration
+    w (4,) + bias.  Returns (C, 3): [est_calibrated, est_raw, margin].
+    """
+    from repro.core.packing import unpack_ternary
+
+    d = q.shape[-1]
+    code = unpack_ternary(packed, d).astype(jnp.float32)   # (C, D)
+    qn = jnp.linalg.norm(q)
+    k = jnp.sum(jnp.abs(code), axis=-1)
+    align = (code @ q) / jnp.sqrt(jnp.maximum(k, 1.0))     # Σc·q/√k
+    e_align = align / jnp.maximum(qn, 1e-30)               # ⟨e_q, e_code⟩
+    d_ip = -2.0 * norm * rho * align
+    est = (w[0] * d0 + w[1] * d_ip + w[2] * delta_sq + w[3] * cross + bias)
+    est_raw = d0 + delta_sq + 2.0 * cross + d_ip
+    margin = (2.0 * qn * norm
+              * jnp.sqrt(jnp.clip(1.0 - e_align * e_align, 0.0, 1.0))
+              * jnp.sqrt(jnp.clip(1.0 - rho * rho, 0.0, 1.0)))
+    return jnp.stack([est, est_raw, margin], axis=-1)
+
+
+def pq_adc_ref(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    """Oracle for the ADC kernel: codes (C, M) uint8, lut (M, K) f32 → (C,).
+    d(c) = Σ_m lut[m, codes[c, m]]."""
+    idx = codes.astype(jnp.int32)
+    part = jax.vmap(lambda t, i: t[i], in_axes=(0, 1), out_axes=1)(lut, idx)
+    return jnp.sum(part, axis=-1)
+
+
+def ternary_unpack_ref(packed: jax.Array, d: int) -> jax.Array:
+    """Oracle for the standalone unpack kernel (int8 trits)."""
+    from repro.core.packing import unpack_ternary
+
+    return unpack_ternary(packed, d)

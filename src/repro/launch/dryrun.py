@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512")
+# Unroll layer stacks so cost_analysis counts every layer (XLA does not
+# multiply while-loop bodies by trip count) — dry-run lowering only.
+os.environ["REPRO_UNROLL"] = "1"
+
+"""Multi-pod dry-run: .lower().compile() for every (arch × shape × mesh).
+
+Proves the distribution config is coherent without hardware: sharding
+propagation succeeds, the compiled module fits memory, and the roofline
+terms (EXPERIMENTS.md §Roofline) are extracted from the artifact.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+        --shape train_4k --mesh single          # one cell
+    PYTHONPATH=src python -m repro.launch.dryrun --all  # all 80 cells
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_proof_cell(arch_name: str, shape_name: str, mesh_name: str,
+                   *, save: bool = True) -> dict:
+    """Scan-form-only compile proof: fast .lower().compile() check (the
+    required dry-run gate) + memory_analysis.  Roofline terms come from
+    the separate unrolled pass (run_cell)."""
+    cfg = ARCHS[arch_name]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        out = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": why}
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+        t0 = time.time()
+        try:
+            os.environ["REPRO_UNROLL"] = "0"
+            jax.clear_caches()
+            fn, structs, in_sh, out_sh, meta = make_step(
+                cfg, mesh, shape, dtype=jnp.bfloat16)
+            with mesh:
+                compiled = jax.jit(fn, in_shardings=in_sh,
+                                   out_shardings=out_sh
+                                   ).lower(*structs).compile()
+            mem = compiled.memory_analysis()
+            peak = (mem.temp_size_in_bytes + mem.argument_size_in_bytes +
+                    mem.output_size_in_bytes)
+            out = {"arch": arch_name, "shape": shape_name,
+                   "mesh": mesh_name, "status": "ok", "meta": meta,
+                   "compile_s": round(time.time() - t0, 1),
+                   "peak_memory_bytes": float(peak),
+                   "memory_analysis": str(mem)}
+            print(f"[proof {arch_name} × {shape_name} × {mesh_name}] OK "
+                  f"peak={peak / 2**30:.2f}GiB "
+                  f"({out['compile_s']}s)")
+        except Exception as e:
+            out = {"arch": arch_name, "shape": shape_name,
+                   "mesh": mesh_name, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-3000:]}
+            print(f"[proof {arch_name} × {shape_name} × {mesh_name}] "
+                  f"FAIL: {str(e)[:200]}")
+    if save:
+        d = os.path.join(OUT_DIR, "..", "proof")
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(
+                d, f"{arch_name}__{shape_name}__{mesh_name}.json"),
+                "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_name: str,
+             *, save: bool = True, verbose: bool = True,
+             variant: str = "", step_kwargs: dict | None = None) -> dict:
+    """variant: perf-experiment tag — results saved under
+    experiments/perf/ with the tag; step_kwargs forwarded to make_*_step
+    (e.g. seq_parallel=False, num_micro=4)."""
+    cfg = ARCHS[arch_name]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        # Pass 1 — deployment form (lax.scan over layers): this is the
+        # module you would actually run; its memory_analysis is the "fits"
+        # proof (XLA reuses buffers across scan iterations).
+        os.environ["REPRO_UNROLL"] = "0"
+        jax.clear_caches()
+        kw = step_kwargs or {}
+        fn, structs, in_sh, out_sh, meta = make_step(cfg, mesh, shape,
+                                                     dtype=jnp.bfloat16,
+                                                     **kw)
+        with mesh:
+            compiled_scan = jax.jit(fn, in_shardings=in_sh,
+                                    out_shardings=out_sh
+                                    ).lower(*structs).compile()
+        mem = compiled_scan.memory_analysis()
+        t_scan = time.time() - t0
+
+        # Pass 2 — unrolled form: XLA's cost_analysis does not multiply
+        # while bodies by trip count, so FLOPs/bytes/collectives come from
+        # a layer-unrolled lowering of the SAME computation.
+        os.environ["REPRO_UNROLL"] = "1"
+        jax.clear_caches()
+        fn, structs, in_sh, out_sh, meta = make_step(cfg, mesh, shape,
+                                                     dtype=jnp.bfloat16,
+                                                     **kw)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh,
+                              out_shardings=out_sh).lower(*structs)
+            compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_scan
+
+        report = roofline.analyze(
+            compiled, compiled.as_text(), arch=arch_name, shape=shape,
+            mesh_name=mesh_name, chips=chips, cfg=cfg,
+            cost_repeat=meta.get("cost_repeat", 1))
+        # memory from the deployment (scan) module
+        report.peak_memory_bytes = float(
+            mem.temp_size_in_bytes + mem.argument_size_in_bytes +
+            mem.output_size_in_bytes)
+        out = {"status": "ok", "scan_compile_s": round(t_scan, 1),
+               "unroll_compile_s": round(t_compile, 1), "meta": meta,
+               "variant": variant or "baseline",
+               "memory_analysis": str(mem), **report.to_dict()}
+        if verbose:
+            print(f"[{arch_name} × {shape_name} × {mesh_name}] OK "
+                  f"compute={report.compute_s:.4f}s "
+                  f"memory={report.memory_s:.4f}s "
+                  f"collective={report.collective_s:.4f}s "
+                  f"bottleneck={report.bottleneck} mfu={report.mfu:.3f}")
+            print(f"  peak-mem/device={report.peak_memory_bytes/2**30:.2f}GiB"
+                  f"  useful-flops={report.useful_flops_ratio:.2f}")
+    except Exception as e:
+        out = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-3000:]}
+        if verbose:
+            print(f"[{arch_name} × {shape_name} × {mesh_name}] FAIL: "
+                  f"{type(e).__name__}: {str(e)[:300]}")
+    if save:
+        out_dir = OUT_DIR if not variant else \
+            os.path.join(OUT_DIR, "..", "perf")
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"__{variant}" if variant else ""
+        path = os.path.join(
+            out_dir, f"{arch_name}__{shape_name}__{mesh_name}{tag}.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--proof-only", action="store_true",
+                    help="scan-form compile proof only (fast)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        meshes = ["single", "multipod"]
+
+    results = []
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                if args.proof_only:
+                    p = os.path.join(OUT_DIR, "..", "proof",
+                                     f"{a}__{s}__{m}.json")
+                    if args.skip_existing and os.path.exists(p):
+                        with open(p) as f:
+                            results.append(json.load(f))
+                        continue
+                    results.append(run_proof_cell(a, s, m))
+                    continue
+                path = os.path.join(OUT_DIR, f"{a}__{s}__{m}.json")
+                if args.skip_existing and os.path.exists(path):
+                    with open(path) as f:
+                        prev = json.load(f)
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[{a} × {s} × {m}] cached "
+                              f"({prev['status']})")
+                        results.append(prev)
+                        continue
+                results.append(run_cell(a, s, m))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n=== dry-run: {n_ok} ok / {n_skip} skipped / {n_err} failed "
+          f"of {len(results)} cells ===")
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

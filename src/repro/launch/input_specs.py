@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell —
+weak-type-correct, shardable, zero device allocation.
+
+For [vlm]/[audio] archs the modality frontend is a stub: input_specs
+provides precomputed patch/frame embeddings per the assignment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model_zoo import ModelApi
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                      dtype=jnp.bfloat16) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s), jnp.int32),
+             "labels": sds((b, s), jnp.int32)}
+    if cfg.enc_dec:
+        batch["frames"] = sds((b, cfg.enc_frames, cfg.d_model), dtype)
+    if cfg.family == "vlm":
+        # M-RoPE position triples (t, h, w) for mixed image-text batches
+        batch["positions"] = sds((b, 3, s), jnp.int32)
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                        dtype=jnp.bfloat16) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s), jnp.int32)}
+    if cfg.enc_dec:
+        batch["frames"] = sds((b, cfg.enc_frames, cfg.d_model), dtype)
+    if cfg.family == "vlm":
+        batch["positions"] = sds((b, 3, s), jnp.int32)
+        # dynamic-resolution patch embeddings (frontend stub): the prompt is
+        # image patches + text, already embedded
+        batch["embeds"] = sds((b, s, cfg.d_model), dtype)
+        del batch["positions"]  # embeds path uses default positions
+    return batch
+
+
+def params_structs(api: ModelApi, dtype=jnp.bfloat16):
+    """Abstract param tree via eval_shape — no allocation."""
+    key = sds((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: api.init(k, dtype), key)
+
+
+def cache_structs(api: ModelApi, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: api.init_cache(None, batch, max_len, dtype))
+
+
+def decode_token_specs(shape: ShapeConfig) -> jax.ShapeDtypeStruct:
+    return sds((shape.global_batch, 1), jnp.int32)

@@ -1,0 +1,35 @@
+"""Production meshes.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the `pod` axis is pure
+data parallelism across the DCN/ICI-superlink boundary — gradients reduce
+hierarchically (model → data → pod), which XLA emits as a two-stage
+all-reduce.
+
+Functions, not module constants: importing this module must never touch
+jax device state (dryrun.py sets XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """1-device mesh for smoke tests / examples on this container."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Axes used for batch/data parallelism (pod folds into data)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,199 @@
+"""Roofline-term extraction from a compiled (AOT) dry-run artifact.
+
+    compute term    = HLO_FLOPs  / peak_FLOPs              (per chip)
+    memory term     = HLO_bytes  / HBM_bw                  (per chip)
+    collective term = collective_bytes / ICI link_bw       (per chip)
+
+cost_analysis() runs on the SPMD-partitioned module, so FLOPs/bytes are
+already per-device.  collective_bytes is not in cost_analysis — we parse
+the partitioned HLO and sum the RESULT shapes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (the bytes a
+device receives over ICI; all-reduce counted once per hop ≈ 2·(n−1)/n·size
+simplified to 2× result size for ring execution).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result of an HLO op: "bf16[256,1024]{1,0}" or tuple "(f32[2], bf16[4,4])"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of all array shapes inside shape_str."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict[str, int] = field(default_factory=dict)
+    count_by_op: dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum result-shape bytes of every collective in the partitioned HLO."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.+?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start|-done)?\(", line)
+        if not m:
+            continue
+        if m.group(3) == "-done":
+            continue    # counted at -start
+        shape_str, op = m.group(1), m.group(2)
+        b = shape_bytes(shape_str)
+        if op == "all-reduce":
+            b *= 2      # ring all-reduce ≈ reduce-scatter + all-gather
+        stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + b
+        stats.count_by_op[op] = stats.count_by_op.get(op, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops: float                # per device
+    hbm_bytes: float            # per device
+    coll_bytes: float           # per device
+    coll_detail: dict
+    peak_memory_bytes: float
+    model_flops: float          # 6·N·D (global)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips × HLO_FLOPs) — remat/redundancy waste."""
+        total_hlo = self.flops * self.chips
+        return self.model_flops / total_hlo if total_hlo else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs / (step_time × chips × peak) — the roofline score.
+        Conservative: uses the HLO bytes-accessed memory term, which is a
+        PRE-FUSION upper bound (every op's operands counted; on TPU, fusion
+        keeps most intermediates in VMEM/VREGs)."""
+        denom = self.step_time_s * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    @property
+    def mfu_optimistic(self) -> float:
+        """MFU with the fusion-optimistic memory floor: params + in/out
+        arguments once per step (perfect fusion).  True MFU lies between
+        `mfu` and this."""
+        mem_floor = self.peak_memory_bytes / HBM_BW
+        step = max(self.compute_s, min(self.memory_s, mem_floor),
+                   self.collective_s)
+        denom = step * self.chips * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "coll_bytes_per_dev": self.coll_bytes,
+            "coll_detail": self.coll_detail,
+            "peak_memory_bytes": self.peak_memory_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck, "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio, "mfu": self.mfu,
+            "mfu_optimistic": self.mfu_optimistic,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode: D = batch tokens."""
+    n = cfg.active_params_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens      # forward only
+    return 2.0 * n * shape.global_batch   # one token per sequence
+
+
+def analyze(compiled, lowered_text: str, *, arch: str, shape, mesh_name: str,
+            chips: int, cfg, cost_repeat: int = 1) -> RooflineReport:
+    """cost_repeat: multiplier for costs sitting inside a microbatch loop
+    (XLA counts a while body once; the optimizer epilogue outside the loop
+    is overcounted by <1%, noted in EXPERIMENTS.md)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0)) * cost_repeat
+    hbm = float(cost.get("bytes accessed", 0.0)) * cost_repeat
+    coll = collective_bytes(lowered_text)
+    coll.bytes_by_op = {k: v * cost_repeat
+                        for k, v in coll.bytes_by_op.items()}
+    mem = compiled.memory_analysis()
+    peak = getattr(mem, "temp_size_in_bytes", 0) + \
+        getattr(mem, "argument_size_in_bytes", 0) + \
+        getattr(mem, "output_size_in_bytes", 0)
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops=flops, hbm_bytes=hbm, coll_bytes=float(coll.total_bytes),
+        coll_detail={"bytes": coll.bytes_by_op, "count": coll.count_by_op},
+        peak_memory_bytes=float(peak),
+        model_flops=model_flops_for(cfg, shape),
+    )

@@ -1,0 +1,201 @@
+"""Parameter / activation / cache PartitionSpecs for every model family.
+
+Strategy (TPU v5e, mesh (pod?, data, model)):
+  * 2-D sharding of every large weight: TP along `model` on the "wide" dim
+    (heads / d_ff / vocab), FSDP along `(pod, data)` on the other dim —
+    optimizer state inherits it, so a 72B model + Adam fits 256 chips.
+  * MoE experts: expert-parallel along `model` when n_experts divides the
+    axis, otherwise TP inside each expert (mixtral's 8 experts on a
+    16-way axis).
+  * Every rule checks divisibility and degrades to replication — vocab
+    51865 (whisper) simply cannot shard 16 ways.
+  * Caches: batch → data axes, KV-heads → model; long-context batch=1
+    falls back to sequence sharding (see cache_specs).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, mesh_axis_sizes
+
+# weight-name → (tp_dim, fsdp_dim); tp_dim = the dim sharded along `model`
+_TP_LAST = ("wq", "wk", "wv", "wg", "wu", "up", "in_proj", "wi", "w_gates",
+            "lm_head", "w_if")
+_TP_FIRST = ("wo", "wd", "down", "out_proj")
+_REPLICATE = ("ln", "ln1", "ln2", "lnx", "final_norm", "enc_norm",
+              "gate_norm", "out_norm", "A_log", "dt_bias", "conv",
+              "router", "r_gates", "dec_pos", "enc_pos")
+
+
+def _divides(n: int, size: int) -> bool:
+    return size > 0 and n % size == 0
+
+
+def _axis_size(mesh, name) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    if isinstance(name, tuple):
+        out = 1
+        for a in name:
+            out *= sizes.get(a, 1)
+        return out
+    return sizes.get(name, 1)
+
+
+# containers whose leading dim(s) are LAYER-STACK dims (consumed by the
+# layer scan) — specs must skip them or per-iteration weight gathers ensue
+_STACK1 = ("blocks", "enc_blocks", "dec_blocks", "tail", "slstm_blocks")
+_STACK2 = ("mlstm_blocks", "groups")
+
+
+def _stack_dims(parts: tuple[str, ...]) -> int:
+    if any(p in _STACK2 for p in parts):
+        return 2
+    if any(p in _STACK1 for p in parts):
+        return 1
+    return 0
+
+
+def param_spec(mesh, name: str, shape: tuple[int, ...], *, fsdp: bool = True,
+               mode: str = "2d") -> P:
+    """PartitionSpec for one weight by path/shape — stack-aware: leading
+    layer-stack dims are never sharded (scan slices them per iteration).
+
+    mode="2d": TP along `model` + FSDP along data axes (default).
+    mode="fsdp": pure FSDP over ALL mesh axes, no tensor parallelism —
+    the right scheme for models whose per-layer weights fit one chip
+    (eliminates TP/SP activation collectives; see EXPERIMENTS §Perf)."""
+    model = "model"
+    msize = _axis_size(mesh, model)
+    dp = dp_axes(mesh)
+    if mode == "fsdp":
+        dp = tuple(mesh.axis_names)          # fold model into FSDP
+        msize = 10**9                        # nothing divides → no TP
+        fsdp = True
+    dsize = _axis_size(mesh, dp)
+    parts = tuple(name.split("/"))
+    base = parts[-1]
+    lead = _stack_dims(parts)
+    core = shape[lead:]
+    head = [None] * lead
+
+    def maybe_fsdp(dim_size):
+        return dp if (fsdp and _divides(dim_size, dsize)) else None
+
+    if base in _REPLICATE or len(core) == 0:
+        return P(*([None] * len(shape)))
+    if base in ("bq", "bk", "bv"):
+        tp = model if _divides(core[0], msize) else None
+        return P(*head, tp)
+    if base == "embed":
+        # vocab-sharded along model, d_model FSDP along data; if vocab
+        # doesn't divide, shard d_model instead (never replicate a table)
+        if _divides(shape[0], msize):
+            return P(model, maybe_fsdp(shape[1]))
+        if _divides(shape[1], msize):
+            return P(None, model)
+        return P(None, maybe_fsdp(shape[1]))
+    if "moe" in parts and len(core) == 3 and base in ("wg", "wu", "wd"):
+        # MoE experts (E, D, F) / (E, F, D)
+        e = core[0]
+        if _divides(e, msize):
+            return P(*head, model, maybe_fsdp(core[1]), None)  # expert-par
+        tp_dim = 2 if base in ("wg", "wu") else 1
+        spec = [None, None, None]
+        if _divides(core[tp_dim], msize):
+            spec[tp_dim] = model
+        other = 2 if tp_dim == 1 else 1
+        spec[other] = maybe_fsdp(core[other])
+        return P(*head, *spec)
+    if base in _TP_LAST and len(core) >= 2:
+        tp = model if _divides(core[-1], msize) else None
+        return P(*head, maybe_fsdp(core[0]),
+                 *([None] * (len(core) - 2)), tp)
+    if base in _TP_FIRST and len(core) >= 2:
+        tp = model if _divides(core[0], msize) else None
+        return P(*head, tp, *([None] * (len(core) - 2)),
+                 maybe_fsdp(core[-1]))
+    return P(*([None] * len(shape)))
+
+
+def param_specs(mesh, params, *, fsdp: bool = True, mode: str = "2d"):
+    """Specs pytree matching `params` (works on ShapeDtypeStruct trees)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = []
+    for path, leaf in flat:
+        name = jax.tree_util.keystr(path)
+        # normalize "['blocks']['attn']['wq']" → "blocks/attn/wq"
+        name = name.replace("']['", "/").strip("[']")
+        specs.append(param_spec(mesh, name, leaf.shape, fsdp=fsdp,
+                                mode=mode))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(mesh, batch, *, mode: str = "2d") -> dict:
+    """tokens/labels (B, S) → batch over (pod, data) [all axes in fsdp
+    mode]; embeds/frames too."""
+    dp = dp_axes(mesh) if mode == "2d" else tuple(mesh.axis_names)
+    dsize = _axis_size(mesh, dp)
+
+    def spec(leaf):
+        if leaf.ndim == 0:
+            return P()
+        b = leaf.shape[0]
+        first = dp if _divides(b, dsize) else None
+        return P(first, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_spec_for(mesh, shape: tuple[int, ...], kind: str) -> P:
+    """KV caches (L, B, S, KV, hd) and SSM states — batch→data, heads→model,
+    falling back to sequence→data for batch=1 long-context."""
+    dp = dp_axes(mesh)
+    dsize = _axis_size(mesh, dp)
+    msize = _axis_size(mesh, "model")
+    if kind == "kv":                        # (L|G, B, S, KV, hd)
+        _, b, s, kv, _ = shape
+        spec = [None, None, None, None, None]
+        if _divides(b, dsize):
+            spec[1] = dp
+        elif _divides(s, dsize):
+            spec[2] = dp                    # batch=1 → shard sequence
+        if _divides(kv, msize):
+            spec[3] = "model"
+        elif spec[2] is None and _divides(s, msize):
+            spec[2] = "model"
+        return P(*spec)
+    # generic state: try batch dim then the largest trailing dim
+    spec = [None] * len(shape)
+    for i, n in enumerate(shape):
+        if spec.count(dp) == 0 and _divides(n, dsize) and n >= dsize \
+                and i >= len(shape) - 4:
+            spec[i] = dp
+            break
+    for i in range(len(shape) - 1, -1, -1):
+        if spec[i] is None and _divides(shape[i], msize) \
+                and shape[i] >= msize:
+            spec[i] = "model"
+            break
+    return P(*spec)
+
+
+def cache_specs(mesh, cache):
+    def spec(path, leaf):
+        name = jax.tree_util.keystr(path)
+        if leaf.ndim == 0:
+            return P()
+        if any(k in name for k in ("'k'", "'v'", "attn_k", "attn_v", "xk",
+                                   "xv")) and leaf.ndim == 5:
+            return cache_spec_for(mesh, leaf.shape, "kv")
+        return cache_spec_for(mesh, leaf.shape, "state")
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])
+
+
+def named(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

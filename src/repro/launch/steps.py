@@ -1,0 +1,199 @@
+"""pjit train / prefill / decode step builders with full shardings.
+
+Each make_* returns (step_fn, arg_structs, in_shardings, out_shardings)
+ready for ``jax.jit(step_fn, ...).lower(*arg_structs)`` — the dry-run path —
+or for real execution with concrete arrays of the same shardings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import input_specs as ispec
+from repro.launch import shardings as sh
+from repro.models.model_zoo import ModelApi, build_model, loss_fn
+from repro.train import optimizer
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _activate_constraints(mesh, *, seq_parallel: bool = False,
+                          flash_decode: bool = False):
+    """Enable MaxText-style activation sharding constraints in the model
+    code for subsequent traces (see models/layers.py)."""
+    from repro.launch.mesh import dp_axes, mesh_axis_sizes
+    from repro.models import layers as mlayers
+    sizes = mesh_axis_sizes(mesh)
+    dp = dp_axes(mesh)
+    dsize = 1
+    for a in dp:
+        dsize *= sizes[a]
+    mlayers.set_mesh_axes(dp, dsize, sizes.get("model", 1),
+                          seq_parallel=seq_parallel, mesh=mesh,
+                          flash_decode=flash_decode)
+
+
+def choose_microbatches(cfg: ArchConfig, shape: ShapeConfig, mesh, *,
+                        seq_parallel: bool, budget_bytes: float = 4e9
+                        ) -> int:
+    """Gradient-accumulation factor: smallest divisor of the per-device
+    batch keeping the layer-carry residual stack under `budget_bytes`."""
+    dp = _dp(mesh)
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    b_loc = max(shape.global_batch // dp, 1)
+    tokens = b_loc * shape.seq_len
+    if seq_parallel:
+        tokens = tokens // msize
+    layers = cfg.n_layers + (cfg.n_enc_layers or 0)
+    resid = layers * tokens * cfg.d_model * 6        # f32 + bf16 copies
+    micro = 1
+    while resid / micro > budget_bytes and micro < b_loc:
+        micro *= 2
+    while shape.global_batch % (micro * dp) and micro > 1:
+        micro //= 2
+    return micro
+
+
+def make_train_step(api: ModelApi, mesh, shape: ShapeConfig, *,
+                    dtype=jnp.bfloat16, lr: float = 3e-4,
+                    seq_parallel: bool = True,
+                    num_micro: int | None = None,
+                    sharding_mode: str = "2d"):
+    """loss + grad + AdamW update; FSDP×TP sharded, sequence-parallel
+    activations, gradient-accumulation microbatching.
+
+    sharding_mode="fsdp": pure FSDP over all axes (no TP/SP) — optimal for
+    models whose layers fit one chip (see shardings.param_spec)."""
+    cfg = api.cfg
+    if sharding_mode == "fsdp":
+        seq_parallel = False
+        from repro.launch.mesh import mesh_axis_sizes
+        from repro.models import layers as mlayers
+        all_axes = tuple(mesh.axis_names)
+        total = mesh.devices.size
+        mlayers.set_mesh_axes(all_axes, total, 1, mesh=mesh)
+    else:
+        _activate_constraints(mesh, seq_parallel=seq_parallel)
+    if num_micro is None:
+        num_micro = choose_microbatches(cfg, shape, mesh,
+                                        seq_parallel=seq_parallel)
+
+    def train_step(params, opt_state, batch):
+        if num_micro == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(api, p, batch))(params)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape(num_micro, a.shape[0] // num_micro,
+                                    *a.shape[1:]), batch)
+
+            def mb(acc, mbatch):
+                l, g = jax.value_and_grad(
+                    lambda p: loss_fn(api, p, mbatch))(params)
+                return jax.tree.map(jnp.add, acc, g), l
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(mb, zeros, micro)
+            grads = jax.tree.map(lambda g: g / num_micro, grads)
+            loss = jnp.mean(losses)
+        new_params, new_opt = optimizer.update(grads, opt_state, params,
+                                               lr=lr)
+        return loss, new_params, new_opt
+
+    params_s = ispec.params_structs(api, dtype)
+    opt_s = jax.eval_shape(optimizer.init, params_s)
+    batch_s = ispec.train_batch_specs(cfg, shape, dtype)
+
+    p_spec = sh.param_specs(mesh, params_s, fsdp=True, mode=sharding_mode)
+    opt_spec = optimizer.AdamWState(step=P(), mu=p_spec, nu=p_spec)
+    b_spec = sh.batch_specs(mesh, batch_s, mode=sharding_mode)
+
+    in_sh = (_named(mesh, p_spec), _named(mesh, opt_spec),
+             _named(mesh, b_spec))
+    out_sh = (_named(mesh, P()), in_sh[0], in_sh[1])
+    meta = {"num_micro": num_micro, "seq_parallel": seq_parallel,
+            "cost_repeat": num_micro, "sharding_mode": sharding_mode}
+    return train_step, (params_s, opt_s, batch_s), in_sh, out_sh, meta
+
+
+def make_prefill_step(api: ModelApi, mesh, shape: ShapeConfig, *,
+                      dtype=jnp.bfloat16):
+    """Prompt pass → last-position logits (inference prefill)."""
+    cfg = api.cfg
+    _activate_constraints(mesh)
+
+    def prefill_step(params, batch):
+        logits, _ = api.forward(params, batch, last_only=True, remat=False)
+        return logits
+
+    params_s = ispec.params_structs(api, dtype)
+    batch_s = ispec.prefill_batch_specs(cfg, shape, dtype)
+    p_spec = sh.param_specs(mesh, params_s, fsdp=False)   # weights TP-only
+    b_spec = sh.batch_specs(mesh, batch_s)
+    in_sh = (_named(mesh, p_spec), _named(mesh, b_spec))
+    out_sh = _named(mesh, P(sh.dp_axes(mesh) if
+                            shape.global_batch % _dp(mesh) == 0 else None))
+    return prefill_step, (params_s, batch_s), in_sh, out_sh, {
+        "cost_repeat": 1}
+
+
+def _dp(mesh) -> int:
+    out = 1
+    for a, n in zip(mesh.axis_names, mesh.devices.shape):
+        if a in ("pod", "data"):
+            out *= n
+    return out
+
+
+def make_decode_step(api: ModelApi, mesh, shape: ShapeConfig, *,
+                     dtype=jnp.bfloat16, flash_decode: bool | None = None):
+    """One-token serve_step against a seq_len KV cache.
+
+    flash_decode defaults ON exactly when the cache falls back to
+    sequence sharding (KV heads don't divide the TP axis) — the case
+    where plain attention makes XLA gather the cache."""
+    cfg = api.cfg
+    msize = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if flash_decode is None:
+        flash_decode = cfg.n_kv_heads % msize != 0
+    _activate_constraints(mesh, flash_decode=flash_decode)
+
+    def serve_step(params, tokens, cache):
+        logits, new_cache = api.decode_step(params, tokens, cache)
+        return logits, new_cache
+
+    params_s = ispec.params_structs(api, dtype)
+    cache_s = ispec.cache_structs(api, shape.global_batch, shape.seq_len,
+                                  dtype)
+    tok_s = ispec.decode_token_specs(shape)
+
+    p_spec = sh.param_specs(mesh, params_s, fsdp=False)
+    c_spec = sh.cache_specs(mesh, cache_s)
+    t_spec = sh.batch_specs(mesh, {"t": tok_s})["t"]
+    in_sh = (_named(mesh, p_spec), _named(mesh, t_spec),
+             _named(mesh, c_spec))
+    out_sh = (_named(mesh, P(None)), in_sh[2])
+    return serve_step, (params_s, tok_s, cache_s), in_sh, out_sh, {
+        "cost_repeat": 1, "flash_decode": flash_decode}
+
+
+def make_step(arch: ArchConfig, mesh, shape: ShapeConfig,
+              dtype=jnp.bfloat16, **kwargs):
+    """Dispatch on shape.kind; returns (fn, structs, in_sh, out_sh, meta).
+    kwargs forward to the specific builder (perf-variant knobs)."""
+    api = build_model(arch)
+    if shape.kind == "train":
+        return make_train_step(api, mesh, shape, dtype=dtype, **kwargs)
+    if shape.kind == "prefill":
+        return make_prefill_step(api, mesh, shape, dtype=dtype, **kwargs)
+    return make_decode_step(api, mesh, shape, dtype=dtype, **kwargs)

@@ -1,0 +1,54 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+        --steps 100 --batch 8 --seq 128 [--reduced]
+
+On this container it runs the reduced config on the host mesh; on a real
+fleet the same entry point builds the production mesh and the pjit train
+step from launch/steps.py (--production flag lowers through the sharded
+path; requires the device count).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, SHAPES
+from repro.models import build_model
+from repro.train.loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=sorted(ARCHS))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_launch_train")
+    ap.add_argument("--full", action="store_true",
+                    help="full (production) config instead of reduced")
+    args = ap.parse_args()
+
+    cfg = ARCHS[args.arch] if args.full else ARCHS[args.arch].reduced()
+    api = build_model(cfg)
+    print(f"training {cfg.name} ({'full' if args.full else 'reduced'}) "
+          f"≈{cfg.params_count() / 1e6:.0f}M params on "
+          f"{len(jax.devices())} device(s)")
+    tc = TrainConfig(steps=args.steps, batch=args.batch, seq_len=args.seq,
+                     lr=args.lr, ckpt_every=max(args.steps // 4, 1),
+                     ckpt_dir=args.ckpt_dir)
+    state = train(api, tc, resume=True)
+    if state.losses:
+        print(f"done: step={state.step} loss {state.losses[0]:.3f} → "
+              f"{state.losses[-1]:.3f} (stragglers={state.stragglers}, "
+              f"skipped={state.skipped})")
+    else:
+        print(f"done: step={state.step} (resumed past --steps; no new "
+              f"steps run)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.memory.layout import RecordLayout
+from repro.memory.tiers import TABLE_I, QueryCost, Tier, TierSpec, Traffic
+
+__all__ = ["RecordLayout", "TABLE_I", "QueryCost", "Tier", "TierSpec",
+           "Traffic"]

@@ -1,0 +1,296 @@
+"""Shared model layers: RMSNorm, RoPE / M-RoPE, GQA attention (full /
+sliding / cross), SwiGLU.  Pure functions over param dicts; every function
+is vmap/scan/pjit friendly and takes an explicit dtype.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ------------------------------------------------- activation sharding
+
+# Set by launch/steps.py before tracing distributed steps; empty (the
+# default) → constraints are no-ops, so single-device tests/examples are
+# unaffected.  XLA's sharding propagation alone tends to carry the
+# embedding table's FEATURE sharding onto activations and replicate the
+# batch — these explicit constraints pin batch→data axes (MaxText-style).
+_BATCH_AXES: tuple[str, ...] = ()
+_DP_SIZE: int = 1
+_MODEL_SIZE: int = 1
+_SEQ_PARALLEL: bool = False
+_MESH = None
+_FLASH_DECODE: bool = False
+
+
+def set_mesh_axes(batch_axes: tuple[str, ...], dp_size: int,
+                  model_size: int, *, seq_parallel: bool = False,
+                  mesh=None, flash_decode: bool = False) -> None:
+    global _BATCH_AXES, _DP_SIZE, _MODEL_SIZE, _SEQ_PARALLEL, _MESH, \
+        _FLASH_DECODE
+    _BATCH_AXES = tuple(batch_axes)
+    _DP_SIZE = dp_size
+    _MODEL_SIZE = model_size
+    _SEQ_PARALLEL = seq_parallel
+    _MESH = mesh
+    _FLASH_DECODE = flash_decode
+
+
+def clear_mesh_axes() -> None:
+    set_mesh_axes((), 1, 1)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin dim0 (batch) to the data axes (if divisible).  In seq-parallel
+    mode, additionally shard dim1 (sequence) over `model`: the layer-carry
+    residuals saved for backward shrink by the TP degree, at the cost of an
+    all-gather feeding each attention block (Korthikanti et al.)."""
+    from jax.sharding import PartitionSpec as P
+    if not _BATCH_AXES or x.shape[0] % _DP_SIZE != 0:
+        return x
+    rest = [None] * (x.ndim - 1)
+    if _SEQ_PARALLEL and x.ndim >= 3 and x.shape[1] % _MODEL_SIZE == 0:
+        rest[0] = "model"
+    spec = P(_BATCH_AXES, *rest)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def constrain_batch_vocab(x: jax.Array) -> jax.Array:
+    """Pin (B, ..., V) logits: batch→data, vocab→model (if divisible)."""
+    from jax.sharding import PartitionSpec as P
+    if not _BATCH_AXES:
+        return x
+    first = _BATCH_AXES if x.shape[0] % _DP_SIZE == 0 else None
+    last = "model" if x.shape[-1] % _MODEL_SIZE == 0 else None
+    if first is None and last is None:
+        return x
+    spec = P(first, *([None] * (x.ndim - 2)), last)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------- normalize
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float
+                ) -> tuple[jax.Array, jax.Array]:
+    """positions (..., S) int32 → (sin, cos) of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x (B, S, H, hd); sin/cos (B, S, hd//2) or (S, hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:
+        sin = sin[None]
+        cos = cos[None]
+    sin = sin[:, :, None, :]
+    cos = cos[:, :, None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1).astype(x.dtype)
+
+
+def mrope_angles(positions: jax.Array, head_dim: int, theta: float,
+                 sections=(2, 1, 1)) -> tuple[jax.Array, jax.Array]:
+    """M-RoPE (Qwen2-VL): positions (B, 3, S) for (t, h, w); the rotary
+    spectrum is split into `sections` (t:h:w proportional chunks) so each
+    frequency band rotates by its own coordinate.  For pure text the three
+    coordinates are identical and this reduces to standard RoPE."""
+    half = head_dim // 2
+    total = sum(sections)
+    bounds = []
+    start = 0
+    for s in sections:
+        size = half * s // total
+        bounds.append((start, start + size))
+        start = start + size
+    bounds[-1] = (bounds[-1][0], half)    # absorb rounding into last chunk
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    sins, coss = [], []
+    for i, (lo, hi) in enumerate(bounds):
+        ang = positions[:, i, :, None].astype(jnp.float32) * freqs[lo:hi]
+        sins.append(jnp.sin(ang))
+        coss.append(jnp.cos(ang))
+    return jnp.concatenate(sins, -1), jnp.concatenate(coss, -1)   # (B, S, half)
+
+
+# -------------------------------------------------------------- attention
+
+
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, KV, hd) → (B, S, KV·n_rep, hd) for GQA."""
+    if n_rep == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kv, n_rep, hd)
+                            ).reshape(b, s, kv * n_rep, hd)
+
+
+def _mask_logits(logits: jax.Array, *, causal: bool, window, offset,
+                 kv_len_valid=None) -> jax.Array:
+    """Apply causal / sliding-window masking to (B, H, Sq, Sk) logits using
+    fused iota comparisons — the (Sq, Sk) mask is never materialized in HBM.
+
+    window: None/0 → full; int or traced scalar → sliding (kpos > qpos−W).
+    offset: absolute position of query row 0 (decode: cache length).
+    kv_len_valid: optional traced scalar — keys ≥ this are padding.
+    """
+    sq, sk = logits.shape[-2], logits.shape[-1]
+    qpos = lax.broadcasted_iota(jnp.int32, (sq, sk), 0) + offset
+    kpos = lax.broadcasted_iota(jnp.int32, (sq, sk), 1)
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= kpos <= qpos
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        m &= jnp.where(w > 0, kpos > qpos - w, True)
+    if kv_len_valid is not None:
+        m &= kpos < kv_len_valid
+    return jnp.where(m[None, None], logits, -1e30)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window=None, offset: int | jax.Array = 0,
+              kv_len_valid=None, q_block: int = 0) -> jax.Array:
+    """Softmax attention. q (B,Sq,H,hd), k/v (B,Sk,H,hd) (H already GQA-
+    repeated).  q_block>0 streams over query blocks (flash-style memory:
+    peak activation (B, H, q_block, Sk) instead of (B, H, Sq, Sk))."""
+    scale = q.shape[-1] ** -0.5
+
+    def blk(qb, off):
+        logits = jnp.einsum("bqhd,bkhd->bhqk", qb, k,
+                            preferred_element_type=jnp.float32) * scale
+        logits = _mask_logits(logits, causal=causal, window=window,
+                              offset=off, kv_len_valid=kv_len_valid)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    sq = q.shape[1]
+    if not q_block or sq <= q_block:
+        return blk(q, offset)
+    assert sq % q_block == 0
+    nb = sq // q_block
+    qr = q.reshape(q.shape[0], nb, q_block, *q.shape[2:])
+
+    def body(i, acc):
+        ob = blk(qr[:, i], offset + i * q_block)
+        return lax.dynamic_update_slice_in_dim(acc, ob[:, None], i, axis=1)
+
+    out = jnp.zeros((q.shape[0], nb, q_block, *q.shape[2:]), v.dtype)
+    out = lax.fori_loop(0, nb, body, out)
+    return out.reshape(q.shape[0], sq, *q.shape[2:])
+
+
+def gqa_attention(x: jax.Array, p: dict, cfg, *, sin, cos,
+                  causal: bool = True, window=None,
+                  offset: int | jax.Array = 0, kv_len_valid=None,
+                  kv_override: tuple[jax.Array, jax.Array] | None = None,
+                  q_block: int = 0) -> jax.Array:
+    """Full GQA attention over x (B, S, D) with params p:
+    wq (D, H·hd) [+bq], wk/wv (D, KV·hd) [+bk/bv], wo (H·hd, D).
+    kv_override: precomputed (k, v) — cross-attention / KV-cache decode."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    if "bq" in p:
+        q = q + p["bq"].reshape(1, 1, h, hd).astype(q.dtype)
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(b, s, kv, hd)
+        v = (x @ p["wv"]).reshape(b, s, kv, hd)
+        if "bk" in p:
+            k = k + p["bk"].reshape(1, 1, kv, hd).astype(k.dtype)
+            v = v + p["bv"].reshape(1, 1, kv, hd).astype(v.dtype)
+        if sin is not None:
+            k = apply_rope(k, sin, cos)
+    else:
+        k, v = kv_override
+    if sin is not None:
+        q_sin, q_cos = sin, cos
+        if kv_override is not None and sin.shape[-2] != s:
+            # decode: rope for the query position only (last offset slots)
+            q_sin = lax.dynamic_slice_in_dim(sin, sin.shape[-2] - s, s, -2)
+            q_cos = lax.dynamic_slice_in_dim(cos, cos.shape[-2] - s, s, -2)
+        q = apply_rope(q, q_sin, q_cos)
+    # Flash-decoding: single-token decode against a SEQUENCE-sharded cache
+    # (KV heads don't divide the TP axis) — partial-softmax shard_map
+    # instead of letting XLA all-gather the cache (see flash_decode.py).
+    if (_FLASH_DECODE and _MESH is not None and kv_override is not None
+            and s == 1 and k.shape[2] % _MODEL_SIZE != 0):
+        from repro.models.flash_decode import flash_decode
+        out = flash_decode(q, k, v, offset, mesh=_MESH,
+                           dp_axes=_BATCH_AXES, n_rep=h // k.shape[2],
+                           window=window)
+        return out.reshape(b, s, h * hd) @ p["wo"]
+    k = repeat_kv(k, h // k.shape[2])
+    v = repeat_kv(v, h // v.shape[2])
+    out = attention(q, k, v, causal=causal, window=window, offset=offset,
+                    kv_len_valid=kv_len_valid, q_block=q_block)
+    return out.reshape(b, s, h * hd) @ p["wo"]
+
+
+def project_kv(x: jax.Array, p: dict, cfg, sin=None, cos=None
+               ) -> tuple[jax.Array, jax.Array]:
+    """K/V projection only (cache fill / cross-attention encoder side)."""
+    b, s, _ = x.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    k = (x @ p["wk"]).reshape(b, s, kv, hd)
+    v = (x @ p["wv"]).reshape(b, s, kv, hd)
+    if "bk" in p:
+        k = k + p["bk"].reshape(1, 1, kv, hd).astype(k.dtype)
+        v = v + p["bv"].reshape(1, 1, kv, hd).astype(v.dtype)
+    if sin is not None:
+        k = apply_rope(k, sin, cos)
+    return k, v
+
+
+# ------------------------------------------------------------------- FFN
+
+
+def swiglu(x: jax.Array, p: dict) -> jax.Array:
+    """SwiGLU: (silu(x·wg) ⊙ (x·wu)) · wd with wg/wu (D,F), wd (F,D)."""
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+# ------------------------------------------------------------------ init
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def attn_params(key, cfg, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    return p
+
+
+def swiglu_params(key, d: int, f: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {"wg": dense_init(ks[0], (d, f), dtype),
+            "wu": dense_init(ks[1], (d, f), dtype),
+            "wd": dense_init(ks[2], (f, d), dtype)}

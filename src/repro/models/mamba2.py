@@ -1,0 +1,166 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked-parallel training form
+and single-step decode form.
+
+Recurrence per head (state S ∈ R^{hd×N}):
+    S_t = a_t · S_{t-1} + (Δ_t x_t) ⊗ B_t ,   a_t = exp(A·Δ_t) ∈ (0,1)
+    y_t = S_t C_t + D · x_t
+Training runs the chunkwise form: intra-chunk via a (Tc×Tc) masked-decay
+matmul (MXU), inter-chunk via the carried state — O(T·Tc) instead of O(T²).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def ssm_dims(cfg) -> tuple[int, int, int]:
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def mamba_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, h, n = ssm_dims(cfg)
+    ks = jax.random.split(key, 5)
+    conv_ch = d_inner + 2 * n
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_inner + 2 * n + h), dtype),
+        "conv": dense_init(ks[1], (cfg.ssm_conv, conv_ch), dtype, 0.5),
+        "A_log": jnp.zeros((h,), jnp.float32) + jnp.log(jnp.e),   # A = -e
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), dtype),
+        "gate_norm": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[2], (d_inner, d), dtype),
+    }
+
+
+def _split_proj(z, cfg):
+    d_inner, h, n = ssm_dims(cfg)
+    zg = z[..., :d_inner]
+    xs = z[..., d_inner:2 * d_inner]
+    bmat = z[..., 2 * d_inner:2 * d_inner + n]
+    cmat = z[..., 2 * d_inner + n:2 * d_inner + 2 * n]
+    dt = z[..., 2 * d_inner + 2 * n:]
+    return zg, xs, bmat, cmat, dt
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv: u (B, T, C), w (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i][None, None]
+              for i in range(k))
+    return jax.nn.silu(out)
+
+
+def mamba_forward(x: jax.Array, p: dict, cfg, *, chunk: int = 256
+                  ) -> jax.Array:
+    """x (B, T, D) → (B, T, D).  T must divide by `chunk` (or be < chunk)."""
+    b, t, d = x.shape
+    d_inner, h, n = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    z = x @ p["in_proj"]
+    zg, xs, bmat, cmat, dt = _split_proj(z, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv"])
+    xs = conv_out[..., :d_inner]
+    bmat = conv_out[..., d_inner:d_inner + n]
+    cmat = conv_out[..., d_inner + n:]
+
+    a_neg = -jnp.exp(p["A_log"])                                  # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,T,H)
+    loga = dt * a_neg                                             # log a_t ≤ 0
+    xh = xs.reshape(b, t, h, hd)
+    xbar = xh * dt[..., None].astype(x.dtype)                     # Δ_t x_t
+
+    if t <= chunk:
+        chunk = t
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+    # chunked views
+    xbar_c = xbar.reshape(b, nc, chunk, h, hd)
+    loga_c = loga.reshape(b, nc, chunk, h)
+    b_c = bmat.reshape(b, nc, chunk, n)
+    c_c = cmat.reshape(b, nc, chunk, n)
+
+    def chunk_step(state, inputs):
+        """state (B, H, hd, N); one chunk."""
+        xb, la, bm, cm = inputs                      # (B,Tc,H,hd) (B,Tc,H) ..
+        lcum = jnp.cumsum(la, axis=1)                # L_t
+        # intra-chunk: M[t,s] = (C_t·B_s)·exp(L_t−L_s)·1[s≤t]
+        g = jnp.einsum("btn,bsn->bts", cm, bm,
+                       preferred_element_type=jnp.float32)
+        decay = lcum[:, :, None, :] - lcum[:, None, :, :]         # (B,t,s,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        # mask BEFORE exp: for s>t the exponent is positive and overflows,
+        # and where-after-exp leaks NaN into gradients (0·inf).
+        decay = jnp.where(tri[None, :, :, None], decay, -1e30)
+        m = jnp.exp(decay) * g[..., None]
+        y_intra = jnp.einsum("btsh,bshp->bthp", m.astype(x.dtype), xb)
+        # inter-chunk: y += exp(L_t)·C_t·S_prev
+        y_inter = jnp.einsum("btn,bhpn->bthp", cm, state) \
+            * jnp.exp(lcum)[..., None].astype(x.dtype)
+        # state update: S = exp(L_Tc)·S_prev + Σ_s exp(L_Tc−L_s)·xb_s ⊗ B_s
+        ltot = lcum[:, -1]                                        # (B,H)
+        w = jnp.exp(ltot[:, None] - lcum)                         # (B,Tc,H)
+        s_new = state * jnp.exp(ltot)[..., None, None].astype(x.dtype) \
+            + jnp.einsum("bshp,bsn,bsh->bhpn", xb, bm, w.astype(x.dtype))
+        return s_new, y_intra + y_inter
+
+    s0 = jnp.zeros((b, h, hd, n), x.dtype)
+    # scan over chunks (moveaxis: chunk axis leading); unrolled in dry-run
+    # mode so cost_analysis sees every chunk's FLOPs
+    from repro.models.scan_util import scan_layers
+    xs_in = (jnp.moveaxis(xbar_c, 1, 0), jnp.moveaxis(loga_c, 1, 0),
+             jnp.moveaxis(b_c, 1, 0), jnp.moveaxis(c_c, 1, 0))
+    _, ys = scan_layers(chunk_step, s0, xs_in)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, h, hd)
+    y = y + xh * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(b, t, d_inner)
+    y = rms_norm(y * jax.nn.silu(zg), p["gate_norm"])
+    return y @ p["out_proj"]
+
+
+def mamba_init_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d_inner, h, n = ssm_dims(cfg)
+    conv_ch = d_inner + 2 * n
+    return {"ssm": jnp.zeros((batch, h, cfg.ssm_head_dim, n), dtype),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype)}
+
+
+def mamba_step(x: jax.Array, state: dict, p: dict, cfg
+               ) -> tuple[jax.Array, dict]:
+    """Single-token decode: x (B, 1, D) + carried (ssm, conv) state."""
+    b = x.shape[0]
+    d_inner, h, n = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+
+    z = x @ p["in_proj"]
+    zg, xs, bmat, cmat, dt = _split_proj(z, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)    # (B,1,C)
+    window = jnp.concatenate([state["conv"], conv_in], axis=1)
+    conv_out = jax.nn.silu(jnp.sum(window * p["conv"][None], axis=1,
+                                   keepdims=True))
+    new_conv = window[:, 1:]
+    xs = conv_out[..., :d_inner]
+    bmat = conv_out[..., d_inner:d_inner + n][:, 0]         # (B,N)
+    cmat = conv_out[..., d_inner + n:][:, 0]
+
+    a_neg = -jnp.exp(p["A_log"])
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = jnp.exp(dtv * a_neg)                                 # (B,H)
+    xh = xs.reshape(b, h, hd)
+    xbar = xh * dtv[..., None].astype(x.dtype)
+    s = state["ssm"] * a[..., None, None].astype(x.dtype) \
+        + jnp.einsum("bhp,bn->bhpn", xbar, bmat)
+    y = jnp.einsum("bhpn,bn->bhp", s, cmat) \
+        + xh * p["D"][None, :, None].astype(x.dtype)
+    y = y.reshape(b, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(zg), p["gate_norm"])
+    return y @ p["out_proj"], {"ssm": s, "conv": new_conv}

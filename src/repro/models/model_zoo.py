@@ -1,0 +1,106 @@
+"""Uniform model API over the four model families.
+
+    api = build_model(cfg)
+    params = api.init(key, dtype)
+    logits, aux = api.forward(params, batch)          # train/prefill path
+    cache = api.init_cache(params, batch, max_len, dtype)
+    logits, cache = api.decode_step(params, tokens, cache)
+
+`batch` is a dict from data/ or launch/input_specs: tokens/labels for LMs,
++frames for audio, +patch embeds for VLM prefill.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import ssm_lm, transformer, whisper
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable
+    forward: Callable                 # (params, batch) → (logits, aux)
+    init_cache: Callable              # (cfg, batch_size, max_len, dtype)
+    decode_step: Callable             # (params, tokens, cache) → (logits, cache)
+    prefill: Callable | None = None
+
+
+def build_model(cfg: ArchConfig) -> ModelApi:
+    if cfg.enc_dec:
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: whisper.init(key, cfg, dtype),
+            forward=lambda p, batch, **kw: whisper.forward(
+                p, batch["frames"], batch["tokens"], cfg, **kw),
+            init_cache=lambda p, b, s, dtype=jnp.float32:
+                whisper.init_cache(cfg, b, s, dtype),
+            decode_step=lambda p, t, c: whisper.decode_step(p, t, c, cfg),
+            prefill=lambda p, batch, cache: whisper.prefill_encoder(
+                p, batch["frames"], cfg, cache),
+        )
+    if cfg.family == "ssm":
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: ssm_lm.xlstm_init(key, cfg,
+                                                                  dtype),
+            forward=lambda p, batch, **kw: ssm_lm.xlstm_forward(
+                p, batch["tokens"], cfg, **kw),
+            init_cache=lambda p, b, s, dtype=jnp.float32:
+                ssm_lm.xlstm_init_cache(cfg, b, dtype),
+            decode_step=lambda p, t, c: ssm_lm.xlstm_decode_step(p, t, c,
+                                                                 cfg),
+        )
+    if cfg.family == "hybrid":
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: ssm_lm.zamba_init(key, cfg,
+                                                                  dtype),
+            forward=lambda p, batch, **kw: ssm_lm.zamba_forward(
+                p, batch["tokens"], cfg, **kw),
+            init_cache=lambda p, b, s, dtype=jnp.float32:
+                ssm_lm.zamba_init_cache(cfg, b, s, dtype),
+            decode_step=lambda p, t, c: ssm_lm.zamba_decode_step(p, t, c,
+                                                                 cfg),
+        )
+    # dense / moe / vlm → generic transformer
+    def fwd(p, batch, **kw):
+        embeds = batch.get("embeds")
+        positions = batch.get("positions")
+        return transformer.forward(p, batch["tokens"], cfg, embeds=embeds,
+                                   positions=positions, **kw)
+
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key, dtype=jnp.float32: transformer.init(key, cfg, dtype),
+        forward=fwd,
+        init_cache=lambda p, b, s, dtype=jnp.float32:
+            transformer.init_cache(cfg, b, s, dtype),
+        decode_step=lambda p, t, c: transformer.decode_step(p, t, c, cfg),
+        prefill=lambda p, batch, cache: transformer.prefill(
+            p, batch["tokens"], cfg, cache,
+            embeds=batch.get("embeds"))[1],
+    )
+
+
+def loss_fn(api: ModelApi, params, batch, *, aux_weight: float = 0.01,
+            **kw) -> jax.Array:
+    """Next-token cross-entropy (+ MoE aux).
+
+    Sharding-aware form: the label logit is extracted with a one-hot
+    contraction and normalized with logsumexp — both reduce over the
+    (model-sharded) vocab axis without gathering it, so no device ever
+    materializes unsharded (B, S, V) logits."""
+    logits, aux = api.forward(params, batch, **kw)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    label_logit = jnp.sum(logits * onehot, axis=-1)
+    return jnp.mean(lse - label_logit) + aux_weight * aux

@@ -1,0 +1,77 @@
+"""Mixture-of-experts FFN (Mixtral / Phi-3.5-MoE style): top-k routing with
+GShard-style capacity dispatch via one-hot matmuls (MXU-friendly, fully
+static shapes — the TPU-native formulation; no sorting / scatter).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def moe_params(key, cfg, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), dtype),
+        "wg": dense_init(ks[1], (e, d, f), dtype),
+        "wu": dense_init(ks[2], (e, d, f), dtype),
+        "wd": dense_init(ks[3], (e, f, d), dtype),
+    }
+
+
+def moe_ffn(x: jax.Array, p: dict, cfg, *, group_size: int = 512
+            ) -> tuple[jax.Array, jax.Array]:
+    """x (B, S, D) → (out, aux_loss).
+
+    GROUPED dispatch (GShard-style): tokens are split into groups of
+    `group_size`; each group routes to per-group expert buffers of capacity
+    C_g = cf·Tg·k/E (overflow drops).  The dispatch one-hot is then
+    (G, Tg, E, C_g) — linear in T, not O(T²/E) like a global-capacity
+    dispatch — and the group axis shards over the data mesh axes while the
+    expert axis of the weights shards over `model` (expert parallelism;
+    XLA inserts the token all-to-all).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    t = b * s
+    tg = min(group_size, t)
+    assert t % tg == 0, (t, tg)
+    g = t // tg
+    cap = max(int(cfg.capacity_factor * tg * k / e), 1)
+    xt = x.reshape(g, tg, d)
+
+    logits = xt @ p["router"]                        # (G, Tg, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (G, Tg, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # buffer position of each (token, choice) within its group's expert
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)   # (G, Tg, k, E)
+    flat = onehot.reshape(g, tg * k, e)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1
+    pos = pos.reshape(g, tg, k, e)
+    within_cap = (pos >= 0) & (pos < cap)
+
+    slot = jnp.sum(jnp.where(within_cap, pos, 0) * onehot, axis=-1)
+    keep = jnp.any(within_cap & (onehot > 0), axis=-1)        # (G, Tg, k)
+    disp = (jax.nn.one_hot(slot, cap, dtype=x.dtype)
+            * keep[..., None].astype(x.dtype))                # (G, Tg, k, C)
+    oh = onehot.astype(x.dtype)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", oh, disp)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", oh, disp,
+                         gate_vals.astype(x.dtype))
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xt)           # (G, E, C, D)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["wg"])) \
+        * jnp.einsum("gecd,edf->gecf", xe, p["wu"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["wd"])             # (G, E, C, D)
+    out = jnp.einsum("gtec,gecd->gtd", combine, ye).reshape(b, s, d)
+
+    # load-balancing aux loss (Switch): E · Σ_e f_e · P_e
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    fe = jnp.mean(jnp.sum(onehot, axis=2).astype(jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(me * fe)
+    return out, aux

@@ -1,0 +1,41 @@
+"""Layer-stack iteration: lax.scan by default (compact HLO), unrolled
+Python loop when REPRO_UNROLL=1.
+
+Why: XLA's cost_analysis() does not multiply a while-loop body by its trip
+count, so the dry-run's roofline FLOPs/bytes/collectives would undercount
+L-layer models by ~L×.  dryrun.py sets REPRO_UNROLL=1 to lower the honest
+(unrolled) module; training/serving keep the scan.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+from jax import lax
+
+
+def unrolling() -> bool:
+    return os.environ.get("REPRO_UNROLL", "0") == "1"
+
+
+def scan_layers(body, carry, xs, *, length: int | None = None):
+    """Drop-in for lax.scan(body, carry, xs) over stacked layer params.
+
+    Unrolled mode indexes each layer's slice (constant indices — XLA emits
+    plain slices, no gathers) and stacks the per-layer outputs.
+    """
+    if not unrolling():
+        return lax.scan(body, carry, xs, length=length)
+    if length is None:
+        length = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(length):
+        xi = jax.tree.map(lambda a: a[i], xs) if xs is not None else None
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jax.numpy.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys

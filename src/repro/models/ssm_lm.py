@@ -1,0 +1,264 @@
+"""SSM/hybrid language models: xlstm-1.3b (mLSTM + periodic sLSTM) and
+zamba2 (Mamba-2 backbone + shared attention block applied periodically).
+
+Heterogeneous layer stacks are organized as GROUP SCANS so the HLO stays
+compact: a group = (period−1 or period) homogeneous inner layers (stacked,
+inner lax.scan) + the special layer; the outer lax.scan runs over groups.
+zamba2's attention block is SHARED (one set of weights applied at every
+attention position — the paper's parameter-sharing trick), so it enters
+the group body as a closure, not a scanned input.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.scan_util import scan_layers
+from repro.models import mamba2, xlstm
+from repro.models.layers import rms_norm
+
+
+# ------------------------------------------------------------------ xLSTM
+
+
+def xlstm_groups(cfg) -> tuple[int, int]:
+    """(n_groups, mlstm_per_group): layers = g·(m+1) with one sLSTM/group."""
+    period = cfg.slstm_every or cfg.n_layers
+    assert cfg.n_layers % period == 0, (cfg.n_layers, period)
+    return cfg.n_layers // period, period - 1
+
+
+def xlstm_init(key, cfg, dtype=jnp.float32) -> dict:
+    g, m = xlstm_groups(cfg)
+    k_emb, k_m, k_s, k_h = jax.random.split(key, 4)
+
+    def one_m(k):
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "mlstm": xlstm.mlstm_params(k, cfg, dtype)}
+
+    def one_s(k):
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "slstm": xlstm.slstm_params(k, cfg, dtype)}
+
+    mkeys = jax.random.split(k_m, g * m).reshape(g, m, 2)
+    return {
+        "embed": L.dense_init(k_emb, (cfg.vocab, cfg.d_model), dtype, 0.02),
+        "mlstm_blocks": jax.vmap(jax.vmap(one_m))(mkeys),
+        "slstm_blocks": jax.vmap(one_s)(jax.random.split(k_s, g)),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(k_h, (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "remat", "last_only"))
+def xlstm_forward(params, tokens, cfg, *, embeds=None, remat=True,
+                  last_only=False):
+    x = L.constrain_batch(params["embed"][tokens] if embeds is None
+                          else embeds)
+
+    def m_layer(x, bp):
+        fn = lambda xx, pp: xx + xlstm.mlstm_forward(
+            rms_norm(xx, pp["ln"], cfg.norm_eps), pp["mlstm"], cfg)
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(x, bp), None
+
+    def group(x, gxs):
+        m_bp, s_bp = gxs
+        x, _ = scan_layers(m_layer, x, m_bp)
+        x = x + xlstm.slstm_forward(rms_norm(x, s_bp["ln"], cfg.norm_eps),
+                                    s_bp["slstm"], cfg)
+        return L.constrain_batch(x), None
+
+    x, _ = scan_layers(group, x, (params["mlstm_blocks"],
+                               params["slstm_blocks"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    return L.constrain_batch_vocab(x @ params["lm_head"]), \
+        jnp.asarray(0.0, jnp.float32)
+
+
+def xlstm_init_cache(cfg, batch: int, dtype=jnp.float32) -> dict:
+    g, m = xlstm_groups(cfg)
+
+    def stack(tree, reps):
+        return jax.tree.map(lambda a: jnp.broadcast_to(
+            a, reps + a.shape), tree)
+
+    return {"m": stack(xlstm.mlstm_init_state(cfg, batch, dtype), (g, m)),
+            "s": stack(xlstm.slstm_init_state(cfg, batch, dtype), (g,)),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def xlstm_decode_step(params, tokens, cache, cfg):
+    x = params["embed"][tokens]                     # (B, 1, D)
+
+    def m_layer(x, xs):
+        bp, st = xs
+        y, st_new = xlstm.mlstm_step(
+            rms_norm(x, bp["ln"], cfg.norm_eps), st, bp["mlstm"], cfg)
+        return x + y, st_new
+
+    def group(x, gxs):
+        m_bp, s_bp, m_st, s_st = gxs
+        x, m_st_new = scan_layers(m_layer, x, (m_bp, m_st))
+        y, s_st_new = xlstm.slstm_step(
+            rms_norm(x, s_bp["ln"], cfg.norm_eps), s_st, s_bp["slstm"], cfg)
+        return x + y, (m_st_new, s_st_new)
+
+    x, (m_new, s_new) = scan_layers(group, x, (params["mlstm_blocks"],
+                                            params["slstm_blocks"],
+                                            cache["m"], cache["s"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1] @ params["lm_head"]
+    return logits, {"m": m_new, "s": s_new, "len": cache["len"] + 1}
+
+
+# ------------------------------------------------------------------ zamba2
+
+
+def zamba_groups(cfg) -> tuple[int, int, int]:
+    """(n_groups, mamba_per_group, tail_layers)."""
+    per = cfg.attn_every
+    g = cfg.n_layers // per
+    return g, per, cfg.n_layers - g * per
+
+
+def zamba_init(key, cfg, dtype=jnp.float32) -> dict:
+    g, per, tail = zamba_groups(cfg)
+    ks = jax.random.split(key, 6)
+
+    def one_m(k):
+        return {"ln": jnp.ones((cfg.d_model,), dtype),
+                "mamba": mamba2.mamba_params(k, cfg, dtype)}
+
+    shared_attn = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.attn_params(ks[2], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": L.swiglu_params(ks[3], cfg.d_model, cfg.d_ff, dtype),
+    }
+    params = {
+        "embed": L.dense_init(ks[0], (cfg.vocab, cfg.d_model), dtype, 0.02),
+        "groups": jax.vmap(jax.vmap(one_m))(
+            jax.random.split(ks[1], g * per).reshape(g, per, 2)),
+        "shared_attn": shared_attn,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "lm_head": L.dense_init(ks[4], (cfg.d_model, cfg.vocab), dtype),
+    }
+    if tail:
+        params["tail"] = jax.vmap(one_m)(jax.random.split(ks[5], tail))
+    return params
+
+
+def _zamba_attn(x, sp, cfg, *, sin, cos, q_block=0):
+    h = L.gqa_attention(rms_norm(x, sp["ln1"], cfg.norm_eps), sp["attn"],
+                        cfg, sin=sin, cos=cos, causal=True, q_block=q_block)
+    x = x + h
+    return x + L.swiglu(rms_norm(x, sp["ln2"], cfg.norm_eps), sp["ffn"])
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "remat", "last_only"))
+def zamba_forward(params, tokens, cfg, *, embeds=None, remat=True,
+                  last_only=False):
+    cfg_attn = cfg
+    x = L.constrain_batch(params["embed"][tokens] if embeds is None
+                          else embeds)
+    b, s = x.shape[0], x.shape[1]
+    sin, cos = L.rope_angles(jnp.arange(s, dtype=jnp.int32), cfg.hd,
+                             cfg.rope_theta)
+    sp = params["shared_attn"]
+
+    def m_layer(x, bp):
+        fn = lambda xx, pp: xx + mamba2.mamba_forward(
+            rms_norm(xx, pp["ln"], cfg.norm_eps), pp["mamba"], cfg)
+        if remat:
+            fn = jax.checkpoint(fn)
+        return fn(x, bp), None
+
+    def group(x, g_bp):
+        x, _ = scan_layers(m_layer, x, g_bp)
+        return L.constrain_batch(
+            _zamba_attn(x, sp, cfg_attn, sin=sin, cos=cos)), None
+
+    x, _ = scan_layers(group, x, params["groups"])
+    if "tail" in params:
+        x, _ = scan_layers(m_layer, x, params["tail"])
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    return L.constrain_batch_vocab(x @ params["lm_head"]), \
+        jnp.asarray(0.0, jnp.float32)
+
+
+def zamba_init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32
+                     ) -> dict:
+    g, per, tail = zamba_groups(cfg)
+
+    def stack(tree, reps):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, reps + a.shape),
+                            tree)
+
+    cache = {
+        "ssm": stack(mamba2.mamba_init_state(cfg, batch, dtype), (g, per)),
+        "attn_k": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                            dtype),
+        "attn_v": jnp.zeros((g, batch, max_len, cfg.n_kv_heads, cfg.hd),
+                            dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        cache["tail_ssm"] = stack(mamba2.mamba_init_state(cfg, batch, dtype),
+                                  (tail,))
+    return cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def zamba_decode_step(params, tokens, cache, cfg):
+    x = params["embed"][tokens]
+    b = x.shape[0]
+    pos = cache["len"]
+    sin, cos = L.rope_angles(pos[None].astype(jnp.int32), cfg.hd,
+                             cfg.rope_theta)
+    sp = params["shared_attn"]
+
+    def m_layer(x, xs):
+        bp, st = xs
+        y, st_new = mamba2.mamba_step(rms_norm(x, bp["ln"], cfg.norm_eps),
+                                      st, bp["mamba"], cfg)
+        return x + y, st_new
+
+    def group(x, gxs):
+        g_bp, g_st, ck, cv = gxs
+        x, st_new = scan_layers(m_layer, x, (g_bp, g_st))
+        xn = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        k_new, v_new = L.project_kv(xn, sp["attn"], cfg, sin, cos)
+        ck = lax.dynamic_update_slice_in_dim(ck, k_new.astype(ck.dtype),
+                                             pos, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cv, v_new.astype(cv.dtype),
+                                             pos, axis=1)
+        h = L.gqa_attention(xn, sp["attn"], cfg, sin=sin, cos=cos,
+                            causal=True, offset=pos, kv_len_valid=pos + 1,
+                            kv_override=(ck, cv))
+        x = x + h
+        x = x + L.swiglu(rms_norm(x, sp["ln2"], cfg.norm_eps), sp["ffn"])
+        return x, (st_new, ck, cv)
+
+    x, (ssm_new, k_new, v_new) = scan_layers(
+        group, x, (params["groups"], cache["ssm"], cache["attn_k"],
+                   cache["attn_v"]))
+    out_cache = {"ssm": ssm_new, "attn_k": k_new, "attn_v": v_new,
+                 "len": pos + 1}
+    if "tail" in params:
+        x, tail_new = scan_layers(m_layer, x, (params["tail"],
+                                            cache["tail_ssm"]))
+        out_cache["tail_ssm"] = tail_new
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x[:, -1] @ params["lm_head"], out_cache

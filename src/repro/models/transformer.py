@@ -1,0 +1,220 @@
+"""Generic decoder-only transformer LM covering the dense/MoE/VLM assigned
+architectures (qwen2/2.5/1.5, qwen2-vl via M-RoPE + embedding inputs,
+gemma3 local:global interleave, mixtral / phi3.5-moe via MoE FFN).
+
+Structure: stacked layer params (leading axis L) consumed by lax.scan, so
+the HLO stays compact for the 512-device dry-run; activation checkpointing
+wraps the block body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.scan_util import scan_layers
+from repro.models.moe import moe_ffn, moe_params
+
+
+# ------------------------------------------------------------------ flags
+
+
+def layer_is_local(cfg, i: int) -> bool:
+    """gemma3 pattern: ratio local then 1 global, repeating."""
+    r = cfg.local_global_ratio
+    if not r or not cfg.sliding_window:
+        return bool(cfg.sliding_window)
+    return (i % (r + 1)) != r
+
+
+def layer_windows(cfg) -> jax.Array:
+    """(L,) int32 — sliding window per layer (0 = full attention)."""
+    return jnp.asarray([cfg.sliding_window if layer_is_local(cfg, i) else 0
+                        for i in range(cfg.n_layers)], jnp.int32)
+
+
+# ------------------------------------------------------------------- init
+
+
+def init(key: jax.Array, cfg, dtype=jnp.float32) -> dict:
+    k_emb, k_blocks, k_head = jax.random.split(key, 3)
+
+    def block_init(bkey):
+        ka, kf, kn = jax.random.split(bkey, 3)
+        p = {"ln1": jnp.ones((cfg.d_model,), dtype),
+             "ln2": jnp.ones((cfg.d_model,), dtype),
+             "attn": L.attn_params(ka, cfg, dtype)}
+        if cfg.is_moe:
+            p["moe"] = moe_params(kf, cfg, dtype)
+        else:
+            p["ffn"] = L.swiglu_params(kf, cfg.d_model, cfg.d_ff, dtype)
+        return p
+
+    blocks = jax.vmap(block_init)(jax.random.split(k_blocks, cfg.n_layers))
+    params = {
+        "embed": L.dense_init(k_emb, (cfg.vocab, cfg.d_model), dtype, 0.02),
+        "blocks": blocks,
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab),
+                                         dtype)
+    return params
+
+
+# ---------------------------------------------------------------- forward
+
+
+def _block(x, bp, cfg, *, sin, cos, window, causal=True, offset=0,
+           q_block=0):
+    h = L.gqa_attention(L.rms_norm(x, bp["ln1"], cfg.norm_eps), bp["attn"],
+                        cfg, sin=sin, cos=cos, causal=causal, window=window,
+                        offset=offset, q_block=q_block)
+    x = x + h
+    z = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        f, aux = moe_ffn(z, bp["moe"], cfg)
+    else:
+        f, aux = L.swiglu(z, bp["ffn"]), jnp.asarray(0.0, jnp.float32)
+    return x + f, aux
+
+
+def _angles(cfg, positions, b, s):
+    if cfg.rope_style == "none":
+        return None, None
+    if cfg.rope_style == "mrope":
+        if positions is None:
+            pos1 = jnp.arange(s, dtype=jnp.int32)[None].repeat(b, 0)
+            positions = jnp.stack([pos1] * 3, axis=1)        # (B, 3, S)
+        return L.mrope_angles(positions, cfg.hd, cfg.rope_theta)
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+        return L.rope_angles(positions, cfg.hd, cfg.rope_theta)
+    return L.rope_angles(positions, cfg.hd, cfg.rope_theta)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "q_block", "remat",
+                                              "last_only"))
+def forward(params: dict, tokens: jax.Array, cfg, *, embeds=None,
+            positions=None, q_block: int = 0, remat: bool = True,
+            last_only: bool = False) -> tuple[jax.Array, jax.Array]:
+    """tokens (B, S) int32 (or embeds (B, S, D) for stubbed frontends)
+    → (logits (B, S, V), aux_loss).  last_only: compute the LM head only on
+    the final position (prefill serving — avoids the (B,S,V) tensor)."""
+    x = L.constrain_batch(params["embed"][tokens] if embeds is None
+                          else embeds)
+    b, s = x.shape[0], x.shape[1]
+    sin, cos = _angles(cfg, positions, b, s)
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        bp, w = xs
+        fn = functools.partial(_block, cfg=cfg, sin=sin, cos=cos,
+                               q_block=q_block)
+        if remat:
+            # full remat: save only the per-layer carry (B,S,D); all block
+            # internals (attention logits, FFN hiddens) recompute on the
+            # backward pass — the standard memory/compute trade at scale.
+            fn = jax.checkpoint(fn)
+        x, aux = fn(carry[0], bp, window=w)
+        return (L.constrain_batch(x), carry[1] + aux), None
+
+    (x, aux), _ = scan_layers(body, (x, jnp.asarray(0.0, jnp.float32)),
+                           (params["blocks"], windows))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_only:
+        x = x[:, -1:]
+    head = params.get("lm_head")
+    logits = x @ head if head is not None else x @ params["embed"].T
+    return L.constrain_batch_vocab(logits), aux
+
+
+# ----------------------------------------------------------------- decode
+
+
+def init_cache(cfg, batch: int, max_len: int, dtype=jnp.float32) -> dict:
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params: dict, tokens: jax.Array, cfg, cache: dict,
+            *, embeds=None, q_block: int = 0) -> tuple[jax.Array, dict]:
+    """Run the full prompt, filling the KV cache; returns (last_logits, cache)."""
+    x = L.constrain_batch(params["embed"][tokens] if embeds is None
+                          else embeds)
+    b, s = x.shape[0], x.shape[1]
+    sin, cos = _angles(cfg, None, b, s)
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        bp, w = xs
+        x = carry
+        xn = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        k, v = L.project_kv(xn, bp["attn"], cfg, sin, cos)
+        h = L.gqa_attention(xn, bp["attn"], cfg, sin=sin, cos=cos,
+                            causal=True, window=w, kv_override=(k, v),
+                            q_block=q_block)
+        x = x + h
+        z = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        f = moe_ffn(z, bp["moe"], cfg)[0] if cfg.is_moe \
+            else L.swiglu(z, bp["ffn"])
+        return L.constrain_batch(x + f), (k, v)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"], windows))
+    max_len = cache["k"].shape[2]
+    pad = [(0, 0), (0, 0), (0, max_len - s), (0, 0), (0, 0)]
+    cache = {"k": jnp.pad(ks, pad), "v": jnp.pad(vs, pad),
+             "len": jnp.asarray(s, jnp.int32)}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x[:, -1] @ head if head is not None \
+        else x[:, -1] @ params["embed"].T
+    return logits, cache
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def decode_step(params: dict, tokens: jax.Array, cache: dict, cfg
+                ) -> tuple[jax.Array, dict]:
+    """One-token decode: tokens (B, 1) against the filled KV cache."""
+    x = L.constrain_batch(params["embed"][tokens])    # (B, 1, D)
+    b = x.shape[0]
+    max_len = cache["k"].shape[2]
+    pos = cache["len"]
+    sin, cos = _angles(cfg, pos[None].astype(jnp.int32), b, 1) \
+        if cfg.rope_style == "rope" else _angles(cfg, None, b, 1)
+    if cfg.rope_style == "mrope":
+        p1 = jnp.full((b, 1), pos, jnp.int32)
+        sin, cos = L.mrope_angles(jnp.stack([p1] * 3, 1), cfg.hd,
+                                  cfg.rope_theta)
+    windows = layer_windows(cfg)
+
+    def body(carry, xs):
+        bp, w, ck, cv = xs
+        x = carry
+        xn = L.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        k_new, v_new = L.project_kv(xn, bp["attn"], cfg, sin, cos)
+        ck = lax.dynamic_update_slice_in_dim(ck, k_new.astype(ck.dtype), pos,
+                                             axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cv, v_new.astype(cv.dtype), pos,
+                                             axis=1)
+        h = L.gqa_attention(xn, bp["attn"], cfg, sin=sin, cos=cos,
+                            causal=True, window=w, offset=pos,
+                            kv_len_valid=pos + 1, kv_override=(ck, cv))
+        x = x + h
+        z = L.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        f = moe_ffn(z, bp["moe"], cfg)[0] if cfg.is_moe \
+            else L.swiglu(z, bp["ffn"])
+        return L.constrain_batch(x + f), (ck, cv)
+
+    x, (ks, vs) = scan_layers(body, x, (params["blocks"], windows,
+                                     cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("lm_head")
+    logits = x[:, -1] @ head if head is not None \
+        else x[:, -1] @ params["embed"].T
+    return logits, {"k": ks, "v": vs, "len": pos + 1}

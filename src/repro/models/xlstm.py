@@ -1,0 +1,229 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-free stabilized scan) and
+sLSTM (scalar memory, sequential by construction).
+
+mLSTM per head (state C ∈ R^{hd×hd}, n ∈ R^{hd}, stabilizer m):
+    m_t = max(log f_t + m_{t-1}, log i_t)
+    C_t = exp(log f_t + m_{t-1} − m_t)·C_{t-1} + exp(log i_t − m_t)·v_t k_tᵀ
+    n_t likewise with k_t;  h_t = o_t ⊙ (C_t q_t) / max(|n_tᵀ q_t|, 1)
+
+The time recurrence runs as lax.scan (the xLSTM paper's "recurrent mode");
+FLOP-equivalent to the chunkwise-parallel form.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def xlstm_dims(cfg) -> tuple[int, int, int]:
+    h = cfg.n_heads
+    d_inner = 2 * cfg.d_model
+    hd = d_inner // h
+    return d_inner, h, hd
+
+
+def mlstm_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, h, hd = xlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "up": dense_init(ks[0], (d, 2 * d_inner), dtype),
+        "wq": dense_init(ks[1], (d_inner, d_inner), dtype),
+        "wk": dense_init(ks[2], (d_inner, d_inner), dtype),
+        "wv": dense_init(ks[3], (d_inner, d_inner), dtype),
+        "w_if": dense_init(ks[4], (d_inner, 2 * h), dtype, 0.01),
+        "out_norm": jnp.ones((d_inner,), dtype),
+        "down": dense_init(ks[5], (d_inner, d), dtype),
+    }
+
+
+def mlstm_forward(x: jax.Array, p: dict, cfg, *, chunk: int = 256
+                  ) -> jax.Array:
+    """x (B, T, D) → (B, T, D), CHUNKWISE-PARALLEL form.
+
+    Derivation (matches the stabilized recurrence in mlstm_step exactly):
+    with L_t = Σ_{τ≤t} log f_τ (within chunk), u_s = log i_s − L_s,
+    M_t = max(m_carry, cummax_{s≤t} u_s) and m_t = L_t + M_t:
+
+        num_t = Σ_{s≤t} e^{u_s − M_t} (q_t·k_s) v_s + e^{m_c − M_t}(Ĉ q_t)
+        n̂_t·q = same weights with k_s;  y_t = num_t / max(|n̂_t·q_t|, 1)
+
+    so the intra-chunk work is a (Tc×Tc) masked matmul per head (MXU) and
+    the carry update reuses the same weights at t = Tc.
+    """
+    from repro.models.scan_util import scan_layers
+
+    b, t, d = x.shape
+    d_inner, h, hd = xlstm_dims(cfg)
+    up = x @ p["up"]
+    u, gate = up[..., :d_inner], up[..., d_inner:]
+    q = (u @ p["wq"]).reshape(b, t, h, hd) * hd ** -0.5
+    k = (u @ p["wk"]).reshape(b, t, h, hd) * hd ** -0.5
+    v = (u @ p["wv"]).reshape(b, t, h, hd)
+    gif = (u @ p["w_if"]).astype(jnp.float32)
+    log_i = gif[..., :h]                                  # (B,T,H)
+    log_f = jax.nn.log_sigmoid(gif[..., h:])              # log f ∈ (−∞, 0)
+
+    if t <= chunk:
+        chunk = t
+    assert t % chunk == 0, (t, chunk)
+    nc = t // chunk
+
+    def reshape_c(a):
+        return jnp.moveaxis(a.reshape(b, nc, chunk, *a.shape[2:]), 1, 0)
+
+    def chunk_step(carry, inp):
+        c_hat, n_hat, m_c = carry          # (B,H,hd,hd), (B,H,hd), (B,H)
+        qc, kc, vc, li, lf = inp           # (B,Tc,H,…)
+        lcum = jnp.cumsum(lf, axis=1)                      # L_t (B,Tc,H)
+        us = li - lcum                                     # u_s
+        m_run = jnp.maximum(jax.lax.cummax(us, axis=1), m_c[:, None])
+        w_intra = jnp.exp(us[:, None, :, :] - m_run[:, :, None, :])
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        w_intra = jnp.where(tri[None, :, :, None], w_intra, 0.0)  # (B,t,s,H)
+        attn = jnp.einsum("bthp,bshp->btsh", qc, kc,
+                          preferred_element_type=jnp.float32)
+        aw = (attn * w_intra).astype(x.dtype)
+        num = jnp.einsum("btsh,bshp->bthp", aw, vc)
+        den_i = jnp.einsum("btsh,bshp->bthp", aw, kc)
+        w_carry = jnp.exp(m_c[:, None] - m_run)            # (B,Tc,H)
+        num = num + w_carry[..., None].astype(x.dtype) \
+            * jnp.einsum("bhpq,bthq->bthp", c_hat, qc)
+        den = jnp.einsum("bthp,bthp->bth", den_i, qc) \
+            + w_carry * jnp.einsum("bhq,bthq->bth", n_hat, qc)
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None].astype(x.dtype)
+        # carry update at chunk end: stabilized quantities use M_Tc, but the
+        # CARRIED stabilizer is the absolute m_Tc = L_Tc + M_Tc (the next
+        # chunk restarts its L at 0, so m_c must absorb this chunk's decay).
+        m_big = m_run[:, -1]                               # M_Tc (B,H)
+        w_end = jnp.exp(us - m_big[:, None])               # (B,Tc,H)
+        c_new = jnp.exp(m_c - m_big)[..., None, None].astype(x.dtype) \
+            * c_hat + jnp.einsum("bthp,bthq,bth->bhpq", vc, kc,
+                                 w_end.astype(x.dtype))
+        n_new = jnp.exp(m_c - m_big)[..., None].astype(x.dtype) * n_hat \
+            + jnp.einsum("bthq,bth->bhq", kc, w_end.astype(x.dtype))
+        m_carry_out = lcum[:, -1] + m_big                  # m_Tc
+        return (c_new, n_new, m_carry_out), y
+
+    c0 = jnp.zeros((b, h, hd, hd), x.dtype)
+    n0 = jnp.zeros((b, h, hd), x.dtype)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+    xs = tuple(reshape_c(a) for a in (q, k, v, log_i, log_f))
+    _, ys = scan_layers(chunk_step, (c0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, d_inner)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(gate)
+    return y @ p["down"]
+
+
+def slstm_params(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_inner, h, hd = xlstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "up": dense_init(ks[0], (d, d_inner), dtype),
+        "w_gates": dense_init(ks[1], (d_inner, 4 * d_inner), dtype),
+        "r_gates": dense_init(ks[2], (h, hd, 4 * hd), dtype, 0.1),
+        "out_norm": jnp.ones((d_inner,), dtype),
+        "down": dense_init(ks[3], (d_inner, d), dtype),
+    }
+
+
+def slstm_forward(x: jax.Array, p: dict, cfg) -> jax.Array:
+    """sLSTM with per-head recurrent mixing (block-diagonal R)."""
+    b, t, d = x.shape
+    d_inner, h, hd = xlstm_dims(cfg)
+    u = (x @ p["up"]).reshape(b, t, h, hd)
+    wg = (u.reshape(b, t, d_inner) @ p["w_gates"]).reshape(b, t, h, 4 * hd)
+
+    def step(carry, inp):
+        c_s, n_s, h_s, m_s = carry                       # (B,H,hd) each
+        wgt = inp                                        # (B,H,4·hd)
+        rec = jnp.einsum("bhp,hpq->bhq", h_s, p["r_gates"])
+        g = (wgt + rec).astype(jnp.float32)
+        zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+        zt = jnp.tanh(zi)
+        ot = jax.nn.sigmoid(oi)
+        log_f = jax.nn.log_sigmoid(fi)
+        m_new = jnp.maximum(log_f + m_s, ii)
+        c_new = jnp.exp(log_f + m_s - m_new) * c_s + jnp.exp(ii - m_new) * zt
+        n_new = jnp.exp(log_f + m_s - m_new) * n_s + jnp.exp(ii - m_new)
+        h_new = (ot * c_new / jnp.maximum(n_new, 1e-6)).astype(x.dtype)
+        return (c_new.astype(jnp.float32), n_new.astype(jnp.float32),
+                h_new, m_new), h_new
+
+    c0 = jnp.zeros((b, h, hd), jnp.float32)
+    m0 = jnp.full((b, h, hd), -1e30, jnp.float32)
+    h0 = jnp.zeros((b, h, hd), x.dtype)
+    _, ys = lax.scan(step, (c0, c0, h0, m0), jnp.moveaxis(wg, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, d_inner)
+    y = rms_norm(y, p["out_norm"])
+    return y @ p["down"]
+
+
+# --------------------------------------------------------------- decode
+
+
+def mlstm_init_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d_inner, h, hd = xlstm_dims(cfg)
+    return {"c": jnp.zeros((batch, h, hd, hd), dtype),
+            "n": jnp.zeros((batch, h, hd), dtype),
+            "m": jnp.full((batch, h), -1e30, jnp.float32)}
+
+
+def mlstm_step(x: jax.Array, state: dict, p: dict, cfg
+               ) -> tuple[jax.Array, dict]:
+    """x (B, 1, D) single-token decode."""
+    b = x.shape[0]
+    d_inner, h, hd = xlstm_dims(cfg)
+    up = x[:, 0] @ p["up"]
+    u, gate = up[..., :d_inner], up[..., d_inner:]
+    q = (u @ p["wq"]).reshape(b, h, hd) * hd ** -0.5
+    k = (u @ p["wk"]).reshape(b, h, hd) * hd ** -0.5
+    v = (u @ p["wv"]).reshape(b, h, hd)
+    gif = (u @ p["w_if"]).astype(jnp.float32)
+    li, lf = gif[..., :h], jax.nn.log_sigmoid(gif[..., h:])
+    m_new = jnp.maximum(lf + state["m"], li)
+    fw = jnp.exp(lf + state["m"] - m_new)[..., None, None].astype(x.dtype)
+    iw = jnp.exp(li - m_new)[..., None, None].astype(x.dtype)
+    c_new = fw * state["c"] + iw * jnp.einsum("bhp,bhq->bhpq", v, k)
+    n_new = fw[..., 0] * state["n"] + iw[..., 0] * k
+    num = jnp.einsum("bhpq,bhq->bhp", c_new, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhq,bhq->bh", n_new, q)),
+                      1.0)[..., None]
+    y = (num / den).reshape(b, 1, d_inner)
+    y = rms_norm(y, p["out_norm"]) * jax.nn.silu(gate[:, None])
+    return y @ p["down"], {"c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_init_state(cfg, batch: int, dtype=jnp.float32) -> dict:
+    d_inner, h, hd = xlstm_dims(cfg)
+    return {"c": jnp.zeros((batch, h, hd), jnp.float32),
+            "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "h": jnp.zeros((batch, h, hd), dtype),
+            "m": jnp.full((batch, h, hd), -1e30, jnp.float32)}
+
+
+def slstm_step(x: jax.Array, state: dict, p: dict, cfg
+               ) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    d_inner, h, hd = xlstm_dims(cfg)
+    u = (x[:, 0] @ p["up"]).reshape(b, h, hd)
+    wgt = (u.reshape(b, d_inner) @ p["w_gates"]).reshape(b, h, 4 * hd)
+    rec = jnp.einsum("bhp,hpq->bhq", state["h"], p["r_gates"])
+    g = (wgt + rec).astype(jnp.float32)
+    zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+    zt = jnp.tanh(zi)
+    ot = jax.nn.sigmoid(oi)
+    log_f = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(log_f + state["m"], ii)
+    c_new = jnp.exp(log_f + state["m"] - m_new) * state["c"] \
+        + jnp.exp(ii - m_new) * zt
+    n_new = jnp.exp(log_f + state["m"] - m_new) * state["n"] \
+        + jnp.exp(ii - m_new)
+    h_new = (ot * c_new / jnp.maximum(n_new, 1e-6)).astype(x.dtype)
+    y = rms_norm(h_new.reshape(b, 1, d_inner), p["out_norm"])
+    return y @ p["down"], {"c": c_new, "n": n_new, "h": h_new, "m": m_new}

@@ -1,0 +1,6 @@
+"""Quantization substrate: k-means, PQ (coarse quantizer), SQ/RQ baselines."""
+
+from repro.quant import pq, rq, sq
+from repro.quant.kmeans import assign, kmeans, quantization_error
+
+__all__ = ["pq", "rq", "sq", "assign", "kmeans", "quantization_error"]

@@ -1,0 +1,58 @@
+"""jit-compiled Lloyd's k-means — the shared trainer for IVF coarse
+centroids and PQ sub-codebooks.
+
+Distance trick: argmin_c ||x−c||² = argmin_c (||c||² − 2x·c), so assignment
+is one matmul (MXU-friendly) — no (N, K, D) intermediate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def assign(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Nearest-centroid ids for x (N, D) against centroids (K, D)."""
+    c_sq = jnp.sum(centroids * centroids, axis=-1)           # (K,)
+    scores = x @ centroids.T                                  # (N, K) — MXU
+    return jnp.argmin(c_sq[None, :] - 2.0 * scores, axis=-1)
+
+
+def _update(x: jax.Array, ids: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Mean of members per centroid (segment-sum) + member counts."""
+    one_hot = jax.nn.one_hot(ids, k, dtype=x.dtype)           # (N, K)
+    counts = jnp.sum(one_hot, axis=0)                         # (K,)
+    sums = one_hot.T @ x                                      # (K, D)
+    means = sums / jnp.maximum(counts, 1.0)[:, None]
+    return means, counts
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key: jax.Array, x: jax.Array, k: int, iters: int = 25) -> jax.Array:
+    """Train k centroids on x (N, D); k-means++-lite init (random distinct
+    samples) then `iters` Lloyd steps.  Empty clusters are re-seeded from the
+    point currently farthest from its centroid."""
+    n = x.shape[0]
+    init_idx = jax.random.choice(key, n, (k,), replace=False)
+    centroids = x[init_idx]
+
+    def step(carry, _):
+        cents = carry
+        ids = assign(x, cents)
+        means, counts = _update(x, ids, k)
+        # re-seed empties at the worst-fit point
+        d = jnp.sum((x - cents[ids]) ** 2, axis=-1)
+        worst = x[jnp.argmax(d)]
+        cents = jnp.where((counts > 0)[:, None], means, worst[None, :])
+        return cents, None
+
+    centroids, _ = jax.lax.scan(step, centroids, None, length=iters)
+    return centroids
+
+
+def quantization_error(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Mean squared L2 distortion of the codebook on x."""
+    ids = assign(x, centroids)
+    return jnp.mean(jnp.sum((x - centroids[ids]) ** 2, axis=-1))

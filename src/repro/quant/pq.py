@@ -1,0 +1,90 @@
+"""Product quantization (Jégou et al.) — FaTRQ's coarse quantizer.
+
+A D-dim vector is split into M subspaces of D/M dims, each quantized with
+its own K-entry codebook (K=256 → 1 byte/subspace).  Asymmetric distance
+computation (ADC) builds a per-query (M, K) lookup table of partial squared
+distances; scoring a code is M table lookups + adds.
+
+These are the "fast memory" structures of Fig. 3: codes (N, M) uint8 and
+codebooks (M, K, D/M) stay hot; FaTRQ streams only residual codes from far
+memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.kmeans import assign, kmeans
+
+
+@functools.partial(jax.tree_util.register_dataclass, data_fields=("codebooks",),
+                   meta_fields=())
+@dataclass(frozen=True)
+class PQCodebook:
+    codebooks: jax.Array   # (M, K, Ds)
+
+    @property
+    def m(self) -> int:
+        return self.codebooks.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.codebooks.shape[1]
+
+    @property
+    def ds(self) -> int:
+        return self.codebooks.shape[2]
+
+    @property
+    def dim(self) -> int:
+        return self.m * self.ds
+
+
+def train(key: jax.Array, x: jax.Array, m: int, k: int = 256,
+          iters: int = 20) -> PQCodebook:
+    """Train M independent sub-codebooks on x (N, D)."""
+    n, d = x.shape
+    assert d % m == 0, f"D={d} not divisible by M={m}"
+    subs = x.reshape(n, m, d // m).transpose(1, 0, 2)       # (M, N, Ds)
+    keys = jax.random.split(key, m)
+    books = jax.vmap(lambda kk, xs: kmeans(kk, xs, k, iters))(keys, subs)
+    return PQCodebook(codebooks=books)
+
+
+@jax.jit
+def encode(cb: PQCodebook, x: jax.Array) -> jax.Array:
+    """x (N, D) → codes (N, M) uint8 (K ≤ 256)."""
+    n, d = x.shape
+    subs = x.reshape(n, cb.m, cb.ds).transpose(1, 0, 2)
+    ids = jax.vmap(assign)(subs, cb.codebooks)               # (M, N)
+    return ids.T.astype(jnp.uint8)
+
+
+def decode(cb: PQCodebook, codes: jax.Array) -> jax.Array:
+    """codes (N, M) → reconstruction x_c (N, D)."""
+    gathered = jax.vmap(lambda book, ids: book[ids], in_axes=(0, 1))(
+        cb.codebooks, codes.astype(jnp.int32))               # (M, N, Ds)
+    n = codes.shape[0]
+    return gathered.transpose(1, 0, 2).reshape(n, cb.m * cb.ds)
+
+
+def adc_table(cb: PQCodebook, q: jax.Array) -> jax.Array:
+    """Per-query LUT (M, K): partial ||q_m − c_mk||²."""
+    qs = q.reshape(cb.m, 1, cb.ds)
+    diff = qs - cb.codebooks                                  # (M, K, Ds)
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def adc_distances(table: jax.Array, codes: jax.Array) -> jax.Array:
+    """Score codes (N, M) against a query LUT (M, K) → d̂₀ (N,)."""
+    idx = codes.astype(jnp.int32)                             # (N, M)
+    part = jax.vmap(lambda t, i: t[i], in_axes=(0, 1), out_axes=1)(table, idx)
+    return jnp.sum(part, axis=-1)
+
+
+def reconstruction_error(cb: PQCodebook, x: jax.Array) -> jax.Array:
+    return jnp.mean(jnp.sum((x - decode(cb, encode(cb, x))) ** 2, axis=-1))

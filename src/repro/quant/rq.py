@@ -1,0 +1,58 @@
+"""Classic residual quantization baseline (Liu et al. / Yuan & Liu).
+
+L stages of PQ, each encoding the residual of the previous stage; decoding
+sums all stage reconstructions (the non-progressive ADC of §II-B that FaTRQ
+improves on: baselines decode *all* levels for *every* candidate).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant import pq
+
+
+@dataclass(frozen=True)
+class RQCodebook:
+    stages: tuple[pq.PQCodebook, ...]
+
+
+def train(key: jax.Array, x: jax.Array, m: int, k: int = 256,
+          levels: int = 2, iters: int = 15) -> tuple[RQCodebook, jax.Array]:
+    """Train L stacked PQ stages; returns codebook + final residual."""
+    stages = []
+    resid = x
+    for lv in range(levels):
+        cb = pq.train(jax.random.fold_in(key, lv), resid, m, k, iters)
+        codes = pq.encode(cb, resid)
+        resid = resid - pq.decode(cb, codes)
+        stages.append(cb)
+    return RQCodebook(stages=tuple(stages)), resid
+
+
+def encode(rq: RQCodebook, x: jax.Array) -> jax.Array:
+    """x (N, D) → codes (N, L, M) uint8."""
+    out, resid = [], x
+    for cb in rq.stages:
+        c = pq.encode(cb, resid)
+        resid = resid - pq.decode(cb, c)
+        out.append(c)
+    return jnp.stack(out, axis=1)
+
+
+def decode(rq: RQCodebook, codes: jax.Array, *, through_level: int | None = None
+           ) -> jax.Array:
+    through = len(rq.stages) if through_level is None else through_level
+    total = 0.0
+    for lv in range(through):
+        total = total + pq.decode(rq.stages[lv], codes[:, lv])
+    return total
+
+
+def adc_distances(rq: RQCodebook, q: jax.Array, codes: jax.Array) -> jax.Array:
+    """Full (all-level) ADC — the baseline's wasteful always-decode path."""
+    recon = decode(rq, codes)
+    return jnp.sum((recon - q[None, :]) ** 2, axis=-1)

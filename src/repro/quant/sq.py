@@ -1,0 +1,45 @@
+"""Scalar-quantization baselines (§V-C comparisons).
+
+* int8 full-vector SQ (the "w/o RQ" baseline in Fig. 7)
+* b-bit residual SQ (the BANG-style residual scheme [12]): per-record
+  min/max range, uniform levels — used at 3 and 4 bits in the paper.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SQCode(NamedTuple):
+    codes: jax.Array   # (N, D) uint8
+    lo: jax.Array      # (N,) per-record min
+    step: jax.Array    # (N,) per-record step
+
+
+def sq_encode(x: jax.Array, bits: int) -> SQCode:
+    """Uniform per-record scalar quantization to 2^bits levels."""
+    levels = (1 << bits) - 1
+    lo = jnp.min(x, axis=-1)
+    hi = jnp.max(x, axis=-1)
+    step = jnp.maximum(hi - lo, 1e-12) / levels
+    q = jnp.clip(jnp.round((x - lo[..., None]) / step[..., None]), 0, levels)
+    return SQCode(codes=q.astype(jnp.uint8), lo=lo.astype(jnp.float32),
+                  step=step.astype(jnp.float32))
+
+
+def sq_decode(code: SQCode) -> jax.Array:
+    return code.codes.astype(jnp.float32) * code.step[..., None] \
+        + code.lo[..., None]
+
+
+def sq_bytes_per_record(d: int, bits: int, *, n_scalars: int = 2) -> int:
+    """Storage: ceil(D·bits/8) + range scalars."""
+    return -(-d * bits // 8) + 4 * n_scalars
+
+
+def int8_encode(x: jax.Array) -> SQCode:
+    """Whole-vector int8 (the paper's "INT8 w/o RQ" line)."""
+    return sq_encode(x, 8)

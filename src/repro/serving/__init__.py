@@ -1,0 +1,3 @@
+from repro.serving.engine import Engine, rag_answer
+
+__all__ = ["Engine", "rag_answer"]

@@ -1,0 +1,67 @@
+"""Batched serving engine: continuous-batching decode over a KV cache,
+plus the RAG loop that couples the LM with the FaTRQ retriever (paper
+Fig. 1: embed prompt → ANNS → feed retrieved context to the LM).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns.pipeline import FaTRQIndex, search
+from repro.models.model_zoo import ModelApi
+
+
+@dataclass
+class ServeStats:
+    steps: int = 0
+    tokens: int = 0
+    retrievals: int = 0
+
+
+class Engine:
+    """Minimal batched decode engine (greedy)."""
+
+    def __init__(self, api: ModelApi, params, *, batch: int, max_len: int,
+                 dtype=jnp.float32):
+        self.api = api
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.cache = api.init_cache(params, batch, max_len, dtype)
+        self.stats = ServeStats()
+
+    def prefill(self, batch_inputs: dict) -> None:
+        if self.api.prefill is not None:
+            self.cache = self.api.prefill(self.params, batch_inputs,
+                                          self.cache)
+
+    def decode(self, tokens: jax.Array, steps: int) -> jax.Array:
+        """tokens (B, 1) seed; returns (B, steps) greedy continuations."""
+        out = []
+        cur = tokens
+        for _ in range(steps):
+            logits, self.cache = self.api.decode_step(self.params, cur,
+                                                      self.cache)
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out.append(cur[:, 0])
+            self.stats.steps += 1
+            self.stats.tokens += self.batch
+        return jnp.stack(out, axis=1)
+
+
+def rag_answer(engine: Engine, index: FaTRQIndex, embed_fn, prompt_tokens,
+               *, k: int = 5, decode_steps: int = 8):
+    """One RAG round-trip: embed the prompt, FaTRQ-retrieve top-k context
+    ids, prepend them (stub tokenization: ids mod vocab), decode."""
+    q = embed_fn(prompt_tokens)                       # (B, D) embeddings
+    ids, cost = search(index, q, k=k)
+    engine.stats.retrievals += q.shape[0]
+    # stub contextualization: retrieved ids become context tokens
+    ctx = (ids % engine.api.cfg.vocab).astype(jnp.int32)
+    seed = jnp.concatenate([ctx, prompt_tokens], axis=1)[:, -1:]
+    gen = engine.decode(seed, decode_steps)
+    return gen, ids, cost

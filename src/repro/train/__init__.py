@@ -1,0 +1,3 @@
+from repro.train import checkpoint, optimizer
+
+__all__ = ["checkpoint", "optimizer"]

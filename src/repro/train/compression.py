@@ -1,0 +1,79 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 1000+ nodes the `pod` axis crosses the DCN boundary, where gradient
+all-reduce bandwidth — not compute — bounds step time.  We provide int8
+quantized all-reduce with ERROR FEEDBACK (Seide et al.; 1-bit Adam
+lineage): each step transmits int8 values + one f32 scale per tensor
+(≈4× fewer bytes than f32, 2× fewer than bf16), and the local
+quantization error is fed back into the next step so the compression
+noise telescopes instead of accumulating.
+
+Usage (inside shard_map over the dp axes):
+    g_sum, new_err = compressed_psum(g + err, axis_names)
+or at the optimizer boundary:
+    grads, err = compress_grads(grads, err)        # pjit-friendly form
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8: returns (q, scale)."""
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-30
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf(g: jax.Array, err: jax.Array
+                  ) -> tuple[jax.Array, jax.Array]:
+    """One error-feedback compression round for a gradient leaf.
+
+    Returns (what-the-wire-carries dequantized, new error residual)."""
+    target = g.astype(jnp.float32) + err
+    q, scale = quantize_int8(target)
+    sent = dequantize_int8(q, scale)
+    return sent, target - sent
+
+
+def compress_grads(grads, err_state):
+    """Tree version.  err_state=None initializes zeros."""
+    if err_state is None:
+        err_state = jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+    out = jax.tree.map(compress_leaf, grads, err_state)
+    sent = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return sent, new_err
+
+
+def compressed_psum(x: jax.Array, axis_names, err: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """int8 all-reduce inside shard_map: scale agreed via psum-max, int8
+    payload summed in int32 (no overflow for ≤2^23 participants)."""
+    target = x.astype(jnp.float32) + err
+    scale = jax.lax.pmax(jnp.max(jnp.abs(target)), axis_names) / 127.0
+    scale = scale + 1e-30
+    q = jnp.clip(jnp.round(target / scale), -127, 127).astype(jnp.int32)
+    total = jax.lax.psum(q, axis_names).astype(jnp.float32) * scale
+    sent_local = q.astype(jnp.float32) * scale
+    return total, target - sent_local
+
+
+def wire_bytes(tree, *, compressed: bool) -> int:
+    """Bytes a ring all-reduce moves per step (per hop, 2(n-1)/n ≈ 2×)."""
+    total = 0
+    for g in jax.tree.leaves(tree):
+        n = 1
+        for d in g.shape:
+            n *= d
+        total += n * (1 if compressed else 4) + (4 if compressed else 0)
+    return 2 * total

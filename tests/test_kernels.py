@@ -1,0 +1,114 @@
+"""Pallas kernel vs pure-jnp oracle: shape/dtype sweeps + hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.packing import pack_ternary, packed_size
+from repro.core.ternary import ternary_encode
+from repro.kernels import ref
+from repro.kernels.ops import adc_scores, refine_scores
+
+
+def _setup_refine(c, d, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (c, d))
+    x_c = x + 0.2 * jax.random.normal(ks[1], (c, d))
+    delta = x - x_c
+    tc = ternary_encode(delta)
+    packed = pack_ternary(tc.code)
+    q = jax.random.normal(ks[2], (d,))
+    d0 = jnp.sum((q[None] - x_c) ** 2, axis=-1)
+    delta_sq = jnp.sum(delta * delta, axis=-1)
+    cross = jnp.sum(x_c * delta, axis=-1)
+    w = jnp.asarray([1.0, 1.1, 0.95, 2.1])
+    bias = jnp.asarray(0.3)
+    return packed, q, d0, delta_sq, cross, tc.norm, tc.rho, w, bias
+
+
+class TestTernaryRefineKernel:
+    @pytest.mark.parametrize("c,d", [(64, 65), (128, 128), (300, 768),
+                                     (1000, 1536), (7, 5), (512, 100)])
+    def test_matches_ref(self, c, d):
+        args = _setup_refine(c, d, seed=c + d)
+        out = refine_scores(*args)
+        expect = ref.ternary_refine_ref(*args)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_matches_core_estimator(self):
+        # The kernel must agree with the system's reference refine path.
+        from repro.core.calibration import CalibrationModel
+        from repro.core.decomposition import RecordScalars
+        from repro.core.estimator import refine_level
+        c, d = 200, 256
+        packed, q, d0, delta_sq, cross, norm, rho, w, bias = _setup_refine(
+            c, d, seed=3)
+        out = refine_scores(packed, q, d0, delta_sq, cross, norm, rho, w,
+                            bias)
+        model = CalibrationModel(w=w, bias=bias,
+                                 resid_std=jnp.asarray(0.0))
+        scalars = RecordScalars(delta_sq=delta_sq, cross=cross, rho=rho,
+                                norm=norm)
+        from repro.core.packing import unpack_ternary
+        codes = unpack_ternary(packed, d)
+        state = refine_level(q, d0, scalars, codes, model, k=10)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(state.est), rtol=2e-5,
+                                   atol=2e-5)
+        # certified interval identical: lo = est_raw - margin
+        np.testing.assert_allclose(np.asarray(out[:, 1] - out[:, 2]),
+                                   np.asarray(state.lo), rtol=2e-5,
+                                   atol=2e-5)
+
+    @given(st.integers(1, 400), st.integers(2, 900), st.integers(0, 99))
+    @settings(max_examples=12, deadline=None)
+    def test_property_shapes(self, c, d, seed):
+        args = _setup_refine(c, d, seed=seed)
+        out = refine_scores(*args)
+        expect = ref.ternary_refine_ref(*args)
+        assert out.shape == (c, 3)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestADCKernel:
+    @pytest.mark.parametrize("c,m,k", [(64, 8, 32), (128, 16, 256),
+                                       (500, 32, 64), (13, 4, 16),
+                                       (256, 96, 256)])
+    def test_matches_ref(self, c, m, k):
+        key = jax.random.PRNGKey(c + m + k)
+        codes = jax.random.randint(key, (c, m), 0, k).astype(jnp.uint8)
+        lut = jax.random.uniform(jax.random.fold_in(key, 1), (m, k))
+        out = adc_scores(codes, lut)
+        expect = ref.pq_adc_ref(codes, lut)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_matches_pq_module(self):
+        from repro.quant import pq
+        from repro.data import make_embeddings
+        x = make_embeddings(jax.random.PRNGKey(0), 1000, 64, clusters=8)
+        cb = pq.train(jax.random.PRNGKey(1), x, m=8, k=64, iters=5)
+        codes = pq.encode(cb, x[:300])
+        q = x[500]
+        lut = pq.adc_table(cb, q)
+        out = adc_scores(codes, lut)
+        expect = pq.adc_distances(lut, codes)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-4, atol=1e-5)
+
+    @given(st.integers(1, 300), st.sampled_from([2, 4, 8, 16]),
+           st.sampled_from([16, 64, 256]), st.integers(0, 99))
+    @settings(max_examples=10, deadline=None)
+    def test_property(self, c, m, k, seed):
+        key = jax.random.PRNGKey(seed)
+        codes = jax.random.randint(key, (c, m), 0, k).astype(jnp.uint8)
+        lut = jax.random.normal(jax.random.fold_in(key, 1), (m, k))
+        np.testing.assert_allclose(np.asarray(adc_scores(codes, lut)),
+                                   np.asarray(ref.pq_adc_ref(codes, lut)),
+                                   rtol=2e-5, atol=2e-5)

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, output shapes + no NaNs; plus a decode step against the cache."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.data import make_token_batch
+from repro.models import build_model, loss_fn
+
+ALL = sorted(ARCHS.keys())
+
+
+def _batch_for(cfg, key, b=2, s=32):
+    batch = make_token_batch(key, b, s, cfg.vocab)
+    if cfg.enc_dec:
+        batch["frames"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (b, cfg.enc_frames, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_smoke(name):
+    cfg = ARCHS[name].reduced()
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init(key)
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+    logits, aux = api.forward(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_train_step_smoke(name):
+    cfg = ARCHS[name].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, jax.random.PRNGKey(1))
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(api, p, batch))(params)
+    assert jnp.isfinite(loss)
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in flat))
+    assert float(gnorm) > 0.0
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_decode_step_smoke(name):
+    cfg = ARCHS[name].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    cache = api.init_cache(params, 2, 64)
+    if cfg.enc_dec:
+        frames = jax.random.normal(jax.random.PRNGKey(2),
+                                   (2, cfg.enc_frames, cfg.d_model))
+        cache = api.prefill(params, {"frames": frames}, cache)
+    toks = jnp.zeros((2, 1), jnp.int32)
+    logits, cache = api.decode_step(params, toks, cache)
+    assert logits.shape == (2, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    logits2, cache = api.decode_step(params, toks, cache)
+    assert int(cache["len"]) == 2
+    assert not bool(jnp.any(jnp.isnan(logits2)))
+
+
+def test_decode_matches_forward_dense():
+    """Greedy decode logits must match teacher-forced forward (qwen2.5)."""
+    cfg = ARCHS["qwen2.5-3b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, 8), 0, cfg.vocab)
+    logits_full, _ = api.forward(params, {"tokens": toks})
+    cache = api.init_cache(params, 1, 16)
+    outs = []
+    for t in range(8):
+        lg, cache = api.decode_step(params, toks[:, t:t + 1], cache)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(logits_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_forward_ssm():
+    """Recurrent decode must match the chunked-parallel forward (zamba2 and
+    xlstm) — validates the SSD/mLSTM dual forms against each other."""
+    for name in ["zamba2-1.2b", "xlstm-1.3b"]:
+        cfg = ARCHS[name].reduced()
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(4), (1, 8), 0,
+                                  cfg.vocab)
+        logits_full, _ = api.forward(params, {"tokens": toks}, remat=False)
+        cache = api.init_cache(params, 1, 16)
+        outs = []
+        for t in range(8):
+            lg, cache = api.decode_step(params, toks[:, t:t + 1], cache)
+            outs.append(lg)
+        dec = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(dec),
+                                   np.asarray(logits_full),
+                                   rtol=5e-3, atol=5e-3, err_msg=name)
+
+
+def test_gemma3_local_global_pattern():
+    from repro.models.transformer import layer_is_local
+    cfg = ARCHS["gemma3-4b"]
+    pattern = [layer_is_local(cfg, i) for i in range(12)]
+    assert pattern == [True] * 5 + [False] + [True] * 5 + [False]
+
+
+def test_mrope_reduces_to_rope_for_text():
+    from repro.models.layers import mrope_angles, rope_angles
+    pos = jnp.arange(16, dtype=jnp.int32)
+    sin1, cos1 = rope_angles(pos, 64, 1e4)
+    mpos = jnp.stack([pos[None]] * 3, axis=1)    # (1, 3, S) same coords
+    sin2, cos2 = mrope_angles(mpos, 64, 1e4)
+    np.testing.assert_allclose(np.asarray(sin1), np.asarray(sin2[0]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_param_counts_plausible():
+    # Full-config parameter counts should be in the right ballpark.
+    approx = {"qwen2-72b": 72e9, "mixtral-8x22b": 140e9,
+              "qwen2.5-3b": 3e9, "zamba2-1.2b": 1.2e9}
+    for name, expect in approx.items():
+        n = ARCHS[name].params_count()
+        assert 0.4 * expect < n < 2.2 * expect, (name, n, expect)

@@ -1,0 +1,95 @@
+"""Tests for the quantization substrate (kmeans / PQ / SQ / RQ)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_embeddings
+from repro.quant import kmeans, pq, quantization_error, rq, sq
+
+
+@pytest.fixture(scope="module")
+def embs():
+    return make_embeddings(jax.random.PRNGKey(0), 4000, 64, clusters=16)
+
+
+class TestKMeans:
+    def test_reduces_distortion(self, embs):
+        key = jax.random.PRNGKey(1)
+        cents = kmeans(key, embs, 16, iters=15)
+        err = float(quantization_error(embs, cents))
+        # random codebook baseline
+        rand = embs[jax.random.choice(jax.random.PRNGKey(2), 4000, (16,),
+                                      replace=False)]
+        err_rand = float(quantization_error(embs, rand))
+        assert err < err_rand
+        assert err < float(jnp.mean(jnp.sum(embs ** 2, -1)))  # better than 0-codebook
+
+    def test_no_empty_clusters(self, embs):
+        cents = kmeans(jax.random.PRNGKey(3), embs, 32, iters=10)
+        from repro.quant.kmeans import assign
+        counts = np.bincount(np.asarray(assign(embs, cents)), minlength=32)
+        assert (counts > 0).all()
+
+
+class TestPQ:
+    def test_roundtrip_shapes_and_error(self, embs):
+        cb = pq.train(jax.random.PRNGKey(4), embs, m=8, k=64, iters=10)
+        codes = pq.encode(cb, embs)
+        assert codes.shape == (4000, 8) and codes.dtype == jnp.uint8
+        recon = pq.decode(cb, codes)
+        assert recon.shape == embs.shape
+        mse = float(jnp.mean(jnp.sum((recon - embs) ** 2, -1)))
+        assert mse < float(jnp.mean(jnp.sum(embs ** 2, -1)))
+
+    def test_adc_matches_explicit_distance(self, embs):
+        cb = pq.train(jax.random.PRNGKey(5), embs, m=8, k=32, iters=8)
+        codes = pq.encode(cb, embs[:200])
+        q = embs[300]
+        table = pq.adc_table(cb, q)
+        d_adc = pq.adc_distances(table, codes)
+        recon = pq.decode(cb, codes)
+        d_true = jnp.sum((recon - q[None]) ** 2, axis=-1)
+        np.testing.assert_allclose(np.asarray(d_adc), np.asarray(d_true),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_adc_preserves_ranking_quality(self, embs):
+        cb = pq.train(jax.random.PRNGKey(6), embs, m=16, k=64, iters=10)
+        codes = pq.encode(cb, embs)
+        q = embs[0] + 0.01
+        table = pq.adc_table(cb, q)
+        d_adc = np.asarray(pq.adc_distances(table, codes))
+        d_true = np.asarray(jnp.sum((embs - q[None]) ** 2, axis=-1))
+        top_true = set(np.argsort(d_true)[:10].tolist())
+        top_adc = set(np.argsort(d_adc)[:50].tolist())
+        assert len(top_true & top_adc) >= 7  # coarse recall@50 ≥ 0.7
+
+
+class TestSQ:
+    @pytest.mark.parametrize("bits", [3, 4, 8])
+    def test_roundtrip_error_shrinks_with_bits(self, embs, bits):
+        code = sq.sq_encode(embs[:500], bits)
+        recon = sq.sq_decode(code)
+        err = float(jnp.mean((recon - embs[:500]) ** 2))
+        assert err < (1.0 / (1 << bits)) ** 1.0  # loose monotone bound
+
+    def test_storage_model(self):
+        # 4-bit SQ on 768-D: 384 B payload (+8 B range) — paper's comparator.
+        assert sq.sq_bytes_per_record(768, 4) == 384 + 8
+        assert sq.sq_bytes_per_record(768, 3) == 288 + 8
+
+
+class TestRQ:
+    def test_levels_monotone(self, embs):
+        rqc, resid = rq.train(jax.random.PRNGKey(7), embs, m=8, k=32,
+                              levels=3, iters=8)
+        codes = rq.encode(rqc, embs)
+        assert codes.shape == (4000, 3, 8)
+        errs = []
+        for lv in range(1, 4):
+            recon = rq.decode(rqc, codes, through_level=lv)
+            errs.append(float(jnp.mean(jnp.sum((recon - embs) ** 2, -1))))
+        assert errs[1] < errs[0] and errs[2] < errs[1]
+        assert float(jnp.mean(jnp.sum(resid ** 2, -1))) == pytest.approx(
+            errs[-1], rel=0.05)

@@ -1,0 +1,60 @@
+"""Serving engine + RAG loop integration tests."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.anns import PipelineConfig, build
+from repro.configs import ARCHS
+from repro.data import make_dataset
+from repro.models import build_model
+from repro.serving import Engine, rag_answer
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = ARCHS["qwen2.5-3b"].reduced()
+    api = build_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    return cfg, api, params
+
+
+class TestEngine:
+    def test_batched_decode_shapes(self, lm):
+        cfg, api, params = lm
+        eng = Engine(api, params, batch=3, max_len=32)
+        out = eng.decode(jnp.zeros((3, 1), jnp.int32), steps=5)
+        assert out.shape == (3, 5)
+        assert eng.stats.tokens == 15
+        assert int(eng.cache["len"]) == 5
+
+    def test_greedy_deterministic(self, lm):
+        cfg, api, params = lm
+        e1 = Engine(api, params, batch=2, max_len=32)
+        e2 = Engine(api, params, batch=2, max_len=32)
+        seed = jnp.ones((2, 1), jnp.int32)
+        assert jnp.array_equal(e1.decode(seed, 6), e2.decode(seed, 6))
+
+
+class TestRAG:
+    def test_round_trip(self, lm):
+        cfg, api, params = lm
+        d = cfg.d_model
+        ds = make_dataset(jax.random.PRNGKey(1), n=3000, d=d, n_queries=2)
+        index = build(jax.random.PRNGKey(2), ds.x,
+                      PipelineConfig(dim=d, pq_m=16, pq_k=32, nlist=16,
+                                     nprobe=4, final_k=5,
+                                     refine_budget=20))
+        eng = Engine(api, params, batch=2, max_len=32)
+
+        def embed_fn(tokens):
+            e = params["embed"][tokens].mean(axis=1)
+            return e / jnp.linalg.norm(e, axis=-1, keepdims=True)
+
+        prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 4), 0,
+                                     cfg.vocab)
+        gen, ids, cost = rag_answer(eng, index, embed_fn, prompts, k=5,
+                                    decode_steps=4)
+        assert gen.shape == (2, 4) and ids.shape == (2, 5)
+        assert cost.total_seconds() > 0
+        assert eng.stats.retrievals == 2

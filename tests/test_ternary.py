@@ -1,0 +1,273 @@
+"""Unit + property tests for the FaTRQ core (§III of the paper)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (calibrate, compute_scalars, decomposed_distance_sq,
+                        encode_database, estimate_q_dot_delta,
+                        exact_distance_sq, first_order, identity_model,
+                        optimal_k, pack_ternary, packed_size,
+                        progressive_search, reconstruct,
+                        residual_ip_estimate, storage_bytes,
+                        ternary_decode_direction, ternary_encode,
+                        ternary_inner, unpack_ternary)
+from repro.core.ternary import brute_force_optimal
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+# ---------------------------------------------------------------- ternary
+
+class TestTernaryEncode:
+    def test_matches_exhaustive_oracle_small_d(self):
+        # The O(D log D) optimum must equal the 3^D enumeration (§III-C).
+        for seed in range(8):
+            delta = _rand((7,), seed)
+            tc = ternary_encode(delta)
+            oracle = brute_force_optimal(delta)
+            e_delta = delta / jnp.linalg.norm(delta)
+            ours = float(ternary_inner(tc.code, e_delta))
+            best = float(ternary_inner(oracle, e_delta))
+            assert ours == pytest.approx(best, rel=1e-6)
+
+    def test_signs_match_input(self):
+        delta = _rand((128,), 3)
+        tc = ternary_encode(delta)
+        nz = np.asarray(tc.code) != 0
+        assert np.all(np.sign(np.asarray(delta))[nz] == np.asarray(tc.code)[nz])
+
+    def test_selects_top_magnitudes(self):
+        delta = _rand((64,), 4)
+        tc = ternary_encode(delta)
+        mags = np.abs(np.asarray(delta))
+        k = int(tc.k)
+        sel = mags[np.asarray(tc.code) != 0]
+        dropped = mags[np.asarray(tc.code) == 0]
+        assert sel.min() >= dropped.max() - 1e-7
+        assert k == (np.asarray(tc.code) != 0).sum()
+
+    def test_rho_is_alignment(self):
+        delta = _rand((96,), 5)
+        tc = ternary_encode(delta)
+        e_d = delta / jnp.linalg.norm(delta)
+        e_c = ternary_decode_direction(tc.code)
+        assert float(jnp.dot(e_d, e_c)) == pytest.approx(float(tc.rho), abs=1e-6)
+        assert 0.0 < float(tc.rho) <= 1.0
+
+    def test_rho_beats_random_projection_floor(self):
+        # With optimal k*, alignment should comfortably exceed the 1/sqrt(D)
+        # scale of a random sign code for Gaussian residuals.
+        delta = _rand((768,), 6)
+        tc = ternary_encode(delta)
+        assert float(tc.rho) > 2.0 / np.sqrt(768)
+
+    def test_batched_matches_loop(self):
+        deltas = _rand((5, 33), 7)
+        tc = ternary_encode(deltas)
+        for i in range(5):
+            tci = ternary_encode(deltas[i])
+            np.testing.assert_array_equal(np.asarray(tc.code[i]),
+                                          np.asarray(tci.code))
+
+    @given(st.integers(2, 11), st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_property_optimality(self, d, seed):
+        delta = np.asarray(_rand((d,), seed % 10_000)) + 1e-3
+        tc = ternary_encode(jnp.asarray(delta))
+        oracle = brute_force_optimal(jnp.asarray(delta))
+        e = delta / np.linalg.norm(delta)
+        ours = float(ternary_inner(tc.code, jnp.asarray(e)))
+        best = float(ternary_inner(oracle, jnp.asarray(e)))
+        assert ours >= best - 1e-6
+
+    def test_optimal_k_monotone_prefix(self):
+        mags = jnp.sort(jnp.abs(_rand((50,), 9)))[::-1]
+        k, score = optimal_k(mags)
+        csum = np.cumsum(np.asarray(mags))
+        scores = csum / np.sqrt(np.arange(1, 51))
+        assert int(k) == int(np.argmax(scores)) + 1
+        assert float(score) == pytest.approx(scores.max(), rel=1e-6)
+
+
+# ---------------------------------------------------------------- packing
+
+class TestPacking:
+    def test_roundtrip(self):
+        code = ternary_encode(_rand((768,), 1)).code
+        packed = pack_ternary(code)
+        assert packed.shape[-1] == 154 and packed.dtype == jnp.uint8
+        out = unpack_ternary(packed, 768)
+        np.testing.assert_array_equal(np.asarray(code), np.asarray(out))
+
+    @given(st.integers(1, 600), st.integers(0, 10_000))
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip_property(self, d, seed):
+        rng = np.random.default_rng(seed)
+        code = rng.integers(-1, 2, size=(3, d)).astype(np.int8)
+        out = unpack_ternary(pack_ternary(jnp.asarray(code)), d)
+        np.testing.assert_array_equal(code, np.asarray(out))
+
+    def test_paper_storage_numbers(self):
+        # §III-D: 768-D → 768/5 + 8 = 162 bytes; 2.4× smaller than 384 B 4b-SQ.
+        assert storage_bytes(768) == 154 + 8 == 162
+        assert packed_size(768) == 154
+        sq4 = 768 * 4 // 8
+        assert sq4 / storage_bytes(768) == pytest.approx(2.37, abs=0.01)
+
+    def test_byte_range_valid_base3(self):
+        code = ternary_encode(_rand((1000,), 2)).code
+        packed = np.asarray(pack_ternary(code))
+        assert packed.max() <= 242  # 3^5 - 1
+
+
+# ----------------------------------------------------------- decomposition
+
+class TestDecomposition:
+    def test_identity_exact(self):
+        # ||x−q||² = d̂₀ + ||δ||² + 2⟨x_c,δ⟩ − 2⟨q,δ⟩ must hold exactly.
+        q = _rand((256,), 11)
+        x = _rand((10, 256), 12)
+        x_c = x + 0.1 * _rand((10, 256), 13)
+        sc = compute_scalars(x, x_c)
+        d0 = jnp.sum((q - x_c) ** 2, axis=-1)
+        q_dot = jnp.sum(q * (x - x_c), axis=-1)
+        lhs = exact_distance_sq(q, x)
+        rhs = decomposed_distance_sq(d0, sc, q_dot)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-4)
+
+    def test_first_order_is_unbiased_ish(self):
+        # For isotropic residuals the dropped term has zero mean (§III-A).
+        q = _rand((64,), 14)
+        x = _rand((2000, 64), 15)
+        x_c = x + 0.05 * _rand((2000, 64), 16)
+        sc = compute_scalars(x, x_c)
+        d0 = jnp.sum((q - x_c) ** 2, axis=-1)
+        err = np.asarray(first_order(d0, sc) - exact_distance_sq(q, x))
+        assert abs(err.mean()) < 0.05 * np.abs(err).max()
+
+
+# ------------------------------------------------------------- estimator
+
+class TestEstimator:
+    def test_identity_weights_with_exact_ip(self):
+        q = _rand((128,), 20)
+        x = _rand((6, 128), 21)
+        x_c = x + 0.1 * _rand((6, 128), 22)
+        sc = compute_scalars(x, x_c)
+        d0 = jnp.sum((q - x_c) ** 2, axis=-1)
+        d_ip_exact = -2.0 * jnp.sum(q * (x - x_c), axis=-1)
+        from repro.core.calibration import build_features, predict
+        feats = build_features(d0, d_ip_exact, sc.delta_sq, sc.cross)
+        pred = predict(identity_model(), feats)
+        np.testing.assert_allclose(np.asarray(pred),
+                                   np.asarray(exact_distance_sq(q, x)),
+                                   rtol=1e-4)
+
+    def test_ternary_estimate_tracks_truth(self):
+        q = _rand((768,), 23)
+        x = _rand((500, 768), 24)
+        x_c = x + 0.2 * _rand((500, 768), 25)
+        delta = x - x_c
+        tc = ternary_encode(delta)
+        est = residual_ip_estimate(q, tc.code, tc.norm, tc.rho)
+        true = -2.0 * jnp.sum(q * delta, axis=-1)
+        corr = np.corrcoef(np.asarray(est), np.asarray(true))[0, 1]
+        assert corr > 0.9
+
+    def test_cauchy_bound_is_sound(self):
+        # |true − est| ≤ margin must hold EXACTLY (it is Cauchy–Schwarz).
+        from repro.core.estimator import cauchy_margin
+        q = _rand((256,), 26)
+        x = _rand((300, 256), 27)
+        x_c = x + 0.3 * _rand((300, 256), 28)
+        delta = x - x_c
+        tc = ternary_encode(delta)
+        est = residual_ip_estimate(q, tc.code, tc.norm, tc.rho)
+        true = -2.0 * jnp.sum(q * delta, axis=-1)
+        margin = cauchy_margin(q, tc.code, tc.norm, tc.rho)
+        assert np.all(np.abs(np.asarray(true - est)) <= np.asarray(margin) * (1 + 1e-5) + 1e-5)
+
+
+# ------------------------------------------------------------------ TRQ
+
+class TestTRQ:
+    def _setup(self, n=400, d=128, levels=1, seed=30):
+        x = _rand((n, d), seed)
+        x_c = x + 0.2 * _rand((n, d), seed + 1)
+        codes, raw = encode_database(x, x_c, num_levels=levels)
+        return x, x_c, codes, raw
+
+    def test_roundtrip_levels(self):
+        x, x_c, codes, raw = self._setup(levels=2)
+        from repro.core.trq import unpack_level
+        for lv, tc in enumerate(raw):
+            np.testing.assert_array_equal(
+                np.asarray(unpack_level(codes, lv)), np.asarray(tc.code))
+
+    def test_stacked_estimate_improves_with_levels(self):
+        x, x_c, codes, _ = self._setup(levels=3)
+        q = _rand((128,), 40)
+        true = jnp.sum(q * (x - x_c), axis=-1)
+        errs = []
+        for lv in range(1, 4):
+            est = estimate_q_dot_delta(q, codes, through_level=lv)
+            errs.append(float(jnp.mean((est - true) ** 2)))
+        assert errs[1] < errs[0] and errs[2] < errs[1]
+
+    def test_calibration_reduces_boundary_mse(self):
+        # §III-E: what matters is precision near the top-k decision boundary.
+        # Calibrate on boundary pairs, evaluate on FRESH boundary pairs; the
+        # calibrated estimator (which uses the ternary d_ip feature) must beat
+        # the first-order estimate (which drops −2⟨q,δ⟩ entirely).
+        x, x_c, codes, _ = self._setup(n=2000, d=256)
+        key = jax.random.PRNGKey(50)
+        pair_idx = jax.random.randint(key, (300,), 0, 2000)
+        q_samples = x[pair_idx] + 0.5 * _rand((300, 256), 51)
+        cal = calibrate(codes, q_samples, x, x_c, pair_idx)
+
+        eval_idx = jax.random.randint(jax.random.PRNGKey(52), (400,), 0, 2000)
+        q_eval = x[eval_idx] + 0.5 * _rand((400, 256), 53)
+        true = jnp.sum((q_eval - x[eval_idx]) ** 2, axis=-1)
+
+        from repro.core.calibration import build_features, predict
+        from repro.core.trq import unpack_level
+        sc = codes.scalars
+        d0 = jnp.sum((q_eval - x_c[eval_idx]) ** 2, axis=-1)
+        code = unpack_level(codes, 0, eval_idx)
+        d_ip = jax.vmap(lambda q, c, n, r: residual_ip_estimate(
+            q, c[None], n[None], r[None])[0])(
+            q_eval, code, sc.norm[eval_idx], sc.rho[eval_idx])
+        feats = build_features(d0, d_ip, sc.delta_sq[eval_idx],
+                               sc.cross[eval_idx])
+        pred_cal = predict(cal.model, feats)
+        sc_eval = type(sc)(delta_sq=sc.delta_sq[eval_idx],
+                           cross=sc.cross[eval_idx],
+                           rho=sc.rho[eval_idx], norm=sc.norm[eval_idx])
+        pred_first = first_order(d0, sc_eval)
+        mse_cal = float(jnp.mean((pred_cal - true) ** 2))
+        mse_first = float(jnp.mean((pred_first - true) ** 2))
+        assert mse_cal < mse_first
+
+    def test_progressive_search_prunes_and_keeps_topk(self):
+        x, x_c, codes, _ = self._setup(n=1000, d=128)
+        q = _rand((128,), 60)
+        d0 = jnp.sum((q - x_c) ** 2, axis=-1)
+        cand = jnp.arange(1000)
+        state = progressive_search(q, d0, codes, cand, k=10, bound="cauchy")
+        true = exact_distance_sq(q, x)
+        true_top10 = set(np.argsort(np.asarray(true))[:10].tolist())
+        alive = set(np.nonzero(np.asarray(state.alive))[0].tolist())
+        # soundness: every true top-10 must survive pruning
+        assert true_top10 <= alive
+        # effectiveness: pruning must drop a majority of candidates
+        assert len(alive) < 500
+
+    def test_bytes_per_record(self):
+        _, _, codes, _ = self._setup(d=768 if False else 128)
+        assert codes.bytes_per_record() == packed_size(128) + 8

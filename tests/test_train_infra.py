@@ -1,0 +1,116 @@
+"""Training-infrastructure tests: optimizer, checkpoint/restore (incl.
+elastic resharding semantics), fault-tolerant loop behaviours."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models import build_model, loss_fn
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer
+from repro.train.loop import TrainConfig, train
+
+
+@pytest.fixture()
+def api():
+    return build_model(ARCHS["qwen2.5-3b"].reduced())
+
+
+class TestOptimizer:
+    def test_loss_decreases(self, api):
+        tc = TrainConfig(steps=30, batch=4, seq_len=32, lr=1e-3,
+                         ckpt_every=0, ckpt_dir="/tmp/ck_never")
+        state = train(api, tc, resume=False)
+        first = np.mean(state.losses[:5])
+        last = np.mean(state.losses[-5:])
+        assert last < first, (first, last)
+
+    def test_grad_clip(self):
+        params = {"w": jnp.ones((4,))}
+        opt = optimizer.init(params)
+        grads = {"w": jnp.full((4,), 1e6)}
+        new_params, _ = optimizer.update(grads, opt, params, lr=0.1,
+                                         grad_clip=1.0, weight_decay=0.0)
+        # update magnitude bounded by lr (clipped unit-norm grad)
+        assert float(jnp.max(jnp.abs(new_params["w"] - params["w"]))) < 0.2
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path, api):
+        params = api.init(jax.random.PRNGKey(0))
+        opt = optimizer.init(params)
+        tree = {"params": params, "opt": opt}
+        ckpt.save(str(tmp_path), 7, tree)
+        assert ckpt.latest_step(str(tmp_path)) == 7
+        restored = ckpt.restore(str(tmp_path), 7, tree)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomic_overwrite_and_latest(self, tmp_path):
+        tree = {"x": jnp.arange(4.0)}
+        ckpt.save(str(tmp_path), 1, tree)
+        ckpt.save(str(tmp_path), 2, {"x": jnp.arange(4.0) * 2})
+        assert ckpt.latest_step(str(tmp_path)) == 2
+        r = ckpt.restore(str(tmp_path), 2, tree)
+        np.testing.assert_allclose(np.asarray(r["x"]),
+                                   np.arange(4.0) * 2)
+
+    def test_elastic_restore_new_sharding(self, tmp_path):
+        # restore onto a different device layout (1-dev mesh here, but the
+        # API path — device_put with explicit shardings — is the same)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        tree = {"x": jnp.arange(16.0).reshape(4, 4)}
+        ckpt.save(str(tmp_path), 3, tree)
+        mesh = jax.make_mesh((1,), ("data",))
+        sh = {"x": NamedSharding(mesh, P("data", None))}
+        r = ckpt.restore(str(tmp_path), 3, tree, shardings=sh)
+        assert r["x"].sharding.spec == P("data", None)
+
+
+class TestFaultTolerance:
+    def test_resume_from_checkpoint(self, tmp_path, api):
+        tc = TrainConfig(steps=10, batch=2, seq_len=16, ckpt_every=5,
+                         ckpt_dir=str(tmp_path))
+        s1 = train(api, tc, resume=False)
+        assert ckpt.latest_step(str(tmp_path)) == 10
+        # "crash" and resume: should be a no-op (already at step 10)
+        s2 = train(api, tc, resume=True)
+        assert s2.step == 10 and len(s2.losses) == 0
+        # extend the run — resumes from 10, trains 5 more
+        tc2 = TrainConfig(steps=15, batch=2, seq_len=16, ckpt_every=5,
+                          ckpt_dir=str(tmp_path))
+        s3 = train(api, tc2, resume=True)
+        assert s3.step == 15 and len(s3.losses) == 5
+
+    def test_deterministic_replay(self, api, tmp_path):
+        tc = TrainConfig(steps=6, batch=2, seq_len=16, ckpt_every=0,
+                         ckpt_dir=str(tmp_path), seed=42)
+        a = train(api, tc, resume=False)
+        b = train(api, tc, resume=False)
+        np.testing.assert_allclose(a.losses, b.losses, rtol=1e-5)
+
+    def test_straggler_detection(self, api, tmp_path):
+        import time
+        events = []
+        slow = {"n": 0}
+
+        def spy(step, dt):
+            events.append(step)
+
+        orig = jax.block_until_ready
+        tc = TrainConfig(steps=8, batch=2, seq_len=16, ckpt_every=0,
+                         ckpt_dir=str(tmp_path), straggler_factor=2.0)
+
+        def extra(key):
+            slow["n"] += 1
+            if slow["n"] == 6:
+                time.sleep(1.0)        # inject a straggling step
+            return {}
+
+        state = train(api, tc, resume=False, on_straggler=spy,
+                      extra_batch=extra)
+        assert state.stragglers >= 1 and len(events) >= 1
