@@ -1,4 +1,6 @@
-"""Fig. 8 — recall@10 vs refinement ratio (SSD fetches / k).
+"""Fig. 8 — recall@10 vs refinement ratio (SSD fetches / k) — plus the
+staged-executor sweep: per-backend (reference jnp vs fused Pallas kernel),
+per-front-stage (IVF probe vs graph beam) timing and QueryCost breakdown.
 
 Baseline: rerank candidates in PQ-distance order (the yellow curve —
 recovering true top-10 at 99% needs ~70 of 100 candidates).  FaTRQ: rerank
@@ -11,14 +13,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import dataset, emit
+from benchmarks.common import dataset, emit, time_call
+from repro.anns import PipelineConfig, build, make_executor, recall_at_k
+from repro.anns.executor import FRONT_STAGES, REFINE_BACKENDS
 from repro.core import (calibrate, encode_database, exact_distance_sq,
                         residual_ip_estimate, unpack_level)
 from repro.core.calibration import build_features, predict
+from repro.data import make_dataset
 from repro.quant import pq as pq_mod
 
 
+def run_backends(n: int = 8000, d: int = 64, nq: int = 32) -> None:
+    """Executor sweep: front ∈ {ivf, graph} × backend ∈ {reference, pallas}.
+
+    Emits wall time per query plus the Table-I QueryCost breakdown per
+    combination.  (The Pallas kernel runs in interpret mode on CPU
+    containers — wall times there measure the emulation, not TPU perf; the
+    QueryCost columns are the hardware-model numbers either way.)
+    """
+    ds = make_dataset(jax.random.PRNGKey(0), n=n, d=d, n_queries=nq,
+                      k_gt=100, clusters=32)
+    cfg = PipelineConfig(dim=d, pq_m=d // 8, pq_k=64, nlist=32, nprobe=8,
+                         final_k=10, refine_budget=40)
+    index = build(jax.random.PRNGKey(1), ds.x, cfg)
+    for front in FRONT_STAGES:
+        for backend in REFINE_BACKENDS:
+            ex = make_executor(index, front=front, backend=backend)
+            us = time_call(lambda: ex.search(ds.queries, k=10)[0],
+                           iters=3, warmup=1)
+            pred, cost = ex.search(ds.queries, k=10)
+            rec = recall_at_k(pred, ds.gt, 10)
+            bd = cost.breakdown()
+            detail = ";".join(f"{t}={v * 1e6 / nq:.3f}us"
+                              for t, v in bd.items() if v > 0)
+            emit(f"executor_{front}_{backend}", us / nq,
+                 f"recall={rec:.3f};model_total="
+                 f"{cost.total_seconds() * 1e6 / nq:.3f}us;{detail}")
+
+
 def run(n: int = 20_000, d: int = 128, top: int = 100) -> None:
+    run_backends()
     ds = dataset(n, d)
     x, q_all, gt = ds.x, ds.queries, ds.gt
 

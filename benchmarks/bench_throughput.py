@@ -12,13 +12,9 @@ the link).
 
 from __future__ import annotations
 
-import jax
-import numpy as np
-
 from benchmarks.common import dataset, emit, fatrq_index
-from repro.anns import baseline_search, recall_at_k, search
-from repro.index import graph
-from repro.memory import QueryCost, Tier
+from repro.anns import make_executor, recall_at_k
+from repro.memory import QueryCost
 
 # host-CPU vs accelerator per-candidate filtering cost (calibrated to the
 # paper's "filtering up to 3.7× faster" §V-B; 40-thread Xeon scoring a
@@ -27,8 +23,10 @@ _SW_NS_PER_CAND = 45.0
 _HW_NS_PER_CAND = 45.0 / 3.7
 
 
-def _fatrq_cost(index, queries, *, hw: bool) -> tuple[float, QueryCost]:
-    pred, cost = search(index, queries, k=10)
+def _fatrq_cost(index, queries, *, hw: bool, front: str = "ivf"
+                ) -> tuple[float, QueryCost]:
+    ex = make_executor(index, front=front)
+    pred, cost = ex.search(queries, k=10)
     rec = recall_at_k(pred, dataset().gt, 10)
     # replace the generic compute estimate with the mode-specific one
     total_cand = sum(t.accesses for k_, t in cost.ledger.items()
@@ -51,7 +49,7 @@ def run() -> None:
     q = ds.queries
 
     # --- IVF front stage
-    base_pred, base_cost = baseline_search(index, q, k=10)
+    base_pred, base_cost = make_executor(index).search_baseline(q, k=10)
     base_rec = recall_at_k(base_pred, ds.gt, 10)
     t_base = base_cost.total_seconds()
 
@@ -68,30 +66,19 @@ def run() -> None:
          f"recall={rec_hw:.3f};speedup={t_base / t_hw:.2f}x;"
          f"hw_over_sw={t_sw / t_hw:.2f}x")
 
-    # --- CAGRA-style graph front stage (fewer candidates → smaller gain,
-    # matching the paper's IVF-vs-CAGRA ordering)
-    g = graph.build(ds.x, degree=16)
-    cand = graph.search_batch(g, ds.x, q, iters=32, beam=64)
-
-    lay = index.layout
-    nq_cand = int(np.prod(cand.shape))
-    cost_gb = QueryCost()
-    cost_gb.record("coarse", Tier.HBM, nq_cand, lay.fast_bytes)
-    cost_gb.record("rerank", Tier.SSD, nq_cand, lay.ssd_bytes)
+    # --- CAGRA-style graph front stage through the same executor (fewer
+    # candidates → smaller gain, matching the paper's IVF-vs-CAGRA ordering)
+    gex = make_executor(index, front="graph")
+    gbase_pred, cost_gb = gex.search_baseline(q, k=10)
+    gbase_rec = recall_at_k(gbase_pred, ds.gt, 10)
     t_gbase = cost_gb.total_seconds()
 
-    # FaTRQ on the graph candidates: level-0 stream + budgeted SSD fetches
-    budget = index.config.refine_budget or 40
-    cost_gf = QueryCost()
-    cost_gf.record("coarse", Tier.HBM, nq_cand, lay.fast_bytes)
-    cost_gf.record("handoff", Tier.CXL, nq_cand, 4)
-    cost_gf.record("refine", Tier.CXL, nq_cand, lay.far_bytes)
-    cost_gf.record("rerank", Tier.SSD, budget * q.shape[0], lay.ssd_bytes)
-    cost_gf.compute_s = nq_cand * _HW_NS_PER_CAND * 1e-9
+    rec_gf, cost_gf = _fatrq_cost(index, q, hw=True, front="graph")
     t_gf = cost_gf.total_seconds()
-    emit("fig6_cagra_baseline_qps", t_gbase / nq * 1e6, "")
+    emit("fig6_cagra_baseline_qps", t_gbase / nq * 1e6,
+         f"recall={gbase_rec:.3f}")
     emit("fig6_cagra_fatrq_hw_qps", t_gf / nq * 1e6,
-         f"speedup={t_gbase / t_gf:.2f}x")
+         f"recall={rec_gf:.3f};speedup={t_gbase / t_gf:.2f}x")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,13 @@
+from repro.anns.executor import SearchExecutor, make_executor
 from repro.anns.pipeline import (FaTRQIndex, PipelineConfig, baseline_search,
                                  build, recall_at_k, search)
+from repro.anns.stages import (Candidates, FrontStage, GraphFrontStage,
+                               IVFFrontStage, PallasRefineBackend, Refined,
+                               RefineBackend, ReferenceRefineBackend)
 
 __all__ = ["FaTRQIndex", "PipelineConfig", "baseline_search", "build",
-           "recall_at_k", "search"]
+           "recall_at_k", "search",
+           "SearchExecutor", "make_executor",
+           "Candidates", "Refined", "FrontStage", "RefineBackend",
+           "IVFFrontStage", "GraphFrontStage",
+           "ReferenceRefineBackend", "PallasRefineBackend"]

@@ -1,0 +1,214 @@
+"""Staged search executor: front → refine → rerank over query micro-batches.
+
+``SearchExecutor`` composes the pluggable stages defined in ``stages.py``
+into the paper's pipelined datapath (Fig. 5) and owns the cost accounting:
+each stage emits device-side counters (0-d int32 arrays), the executor
+accumulates them across micro-batches *on device*, and a single host
+transfer at the end of ``search`` folds the totals into a
+``memory.QueryCost`` ledger — replacing the per-stage ``int(jnp.sum(...))``
+round-trips the old monolithic pipeline did.
+
+Construction is cheap (stages hold references to index arrays; all device
+functions are module-level jits, so compilation caches globally), except
+``front="graph"`` which builds the kNN graph on first use and caches it on
+the executor.  ``make_executor`` memoizes executors per index so facade
+callers (``anns.pipeline``, ``serving``) can call it per search.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.anns import stages as stages_mod
+from repro.anns.stages import (Counters, FrontStage, GraphFrontStage,
+                               IVFFrontStage, PallasRefineBackend,
+                               RefineBackend, ReferenceRefineBackend)
+from repro.index import graph as graph_mod
+from repro.memory import QueryCost, Tier
+
+FRONT_STAGES = ("ivf", "graph")
+REFINE_BACKENDS = ("reference", "pallas")
+
+# measured scale of ADC + ternary adds per candidate (see benchmarks)
+_COMPUTE_S_PER_CAND = 1e-7
+
+
+def _accumulate(total: Counters, new: Counters) -> Counters:
+    for name, v in new.items():
+        total[name] = total[name] + v if name in total else v
+    return total
+
+
+def _collect(counters: Counters) -> dict[str, int]:
+    """The single device→host transfer of a search call."""
+    return {n: int(v) for n, v in
+            zip(counters, jax.device_get(list(counters.values())))}
+
+
+@dataclass
+class SearchExecutor:
+    """Batched staged search over a FaTRQIndex."""
+
+    index: "FaTRQIndex"              # noqa: F821 - import cycle via pipeline
+    front: FrontStage
+    backend: RefineBackend
+    micro_batch: int | None = None   # queries per device step; None = all
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def from_index(cls, index, *, front: str = "ivf",
+                   backend: str = "reference",
+                   micro_batch: int | None = None,
+                   graph_index: graph_mod.GraphIndex | None = None,
+                   **front_opts) -> "SearchExecutor":
+        cfg = index.config
+        if front == "ivf":
+            fs = IVFFrontStage(ivf=index.ivf, codebook=index.codebook,
+                               pq_codes=index.pq_codes,
+                               nprobe=front_opts.pop("nprobe", cfg.nprobe))
+            if front_opts:
+                raise TypeError(f"unknown IVF front options: "
+                                f"{sorted(front_opts)}")
+        elif front == "graph":
+            g = graph_index if graph_index is not None else _graph_for(index)
+            fs = GraphFrontStage(graph=g, codebook=index.codebook,
+                                 pq_codes=index.pq_codes, **front_opts)
+        else:
+            raise ValueError(f"unknown front stage {front!r}; "
+                             f"expected one of {FRONT_STAGES}")
+        if backend == "reference":
+            be = ReferenceRefineBackend()
+        elif backend == "pallas":
+            be = PallasRefineBackend()
+        else:
+            raise ValueError(f"unknown refine backend {backend!r}; "
+                             f"expected one of {REFINE_BACKENDS}")
+        return cls(index=index, front=fs, backend=be, micro_batch=micro_batch)
+
+    # -- search -----------------------------------------------------------
+
+    def _chunks(self, queries: jax.Array):
+        mb = self.micro_batch
+        if mb is None or mb >= queries.shape[0]:
+            yield queries
+            return
+        for i in range(0, queries.shape[0], mb):
+            yield queries[i:i + mb]
+
+    def search(self, queries: jax.Array, *, k: int | None = None,
+               cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
+        """FaTRQ search: returns (Q, k) ids + the folded traffic ledger."""
+        cfg = self.index.config
+        k = k or cfg.final_k
+        # k results need ≥ k fetches, whatever the configured budget
+        budget = max(cfg.refine_budget or max(4 * k, 32), k)
+
+        topk_parts: list[jax.Array] = []
+        counters: Counters = {}
+        for chunk in self._chunks(queries):
+            cand = self.front.candidates(chunk)
+            refined = self.backend.refine(chunk, cand, self.index.trq,
+                                          k=k, bound=cfg.bound, z=cfg.z)
+            topk, n_ssd = stages_mod._rerank_survivors(
+                self.index.x, chunk, cand.ids, refined.est, refined.alive,
+                k=k, budget=budget)
+            topk_parts.append(topk)
+            _accumulate(counters, cand.counters)
+            _accumulate(counters, refined.counters)
+            _accumulate(counters, {"ssd_fetch": n_ssd})
+
+        cost = self._fold(counters, cost)
+        out = topk_parts[0] if len(topk_parts) == 1 else jnp.concatenate(
+            topk_parts, axis=0)
+        return out, cost
+
+    def search_baseline(self, queries: jax.Array, *, k: int | None = None
+                        ) -> tuple[jax.Array, QueryCost]:
+        """SoTA baseline (cuVS/FAISS style): front stage, then exact rerank
+        of the FULL candidate list from SSD — no far-memory refinement."""
+        cfg = self.index.config
+        k = k or cfg.final_k
+        topk_parts: list[jax.Array] = []
+        counters: Counters = {}
+        for chunk in self._chunks(queries):
+            cand = self.front.candidates(chunk)
+            topk, n_valid = stages_mod._rerank_all(
+                self.index.x, chunk, cand.ids, cand.valid, k=k)
+            topk_parts.append(topk)
+            _accumulate(counters, cand.counters)
+            _accumulate(counters, {"ssd_fetch": n_valid})
+
+        counts = _collect(counters)
+        cost = QueryCost()
+        lay = self.index.layout
+        self.front.fold_cost(cost, counts, lay)
+        cost.record("rerank", Tier.SSD, counts["ssd_fetch"], lay.ssd_bytes)
+        cost.add_compute(_COMPUTE_S_PER_CAND * counts["front_cand"])
+        out = topk_parts[0] if len(topk_parts) == 1 else jnp.concatenate(
+            topk_parts, axis=0)
+        return out, cost
+
+    # -- cost folding -----------------------------------------------------
+
+    def _fold(self, counters: Counters, cost: QueryCost | None) -> QueryCost:
+        """One host transfer: device counters → Table-I traffic ledger."""
+        counts = _collect(counters)
+        cost = cost or QueryCost()
+        cfg = self.index.config
+        lay = self.index.layout
+        n_cand = counts["front_cand"]
+        n_alive = counts["refine_alive"]
+
+        self.front.fold_cost(cost, counts, lay)
+        # front → refine handoff: 4 B coarse distance per candidate (§IV)
+        cost.record("handoff", Tier.CXL, n_cand, 4)
+        # level-0 codes stream from far memory for ALL candidates; deeper
+        # levels only for survivors of the previous level.
+        cost.record("refine", Tier.CXL, n_cand, lay.far_bytes)
+        for _ in range(1, cfg.trq_levels):
+            cost.record("refine", Tier.CXL, n_alive, lay.far_bytes)
+        # survivors (≤ budget per query) hit SSD
+        cost.record("rerank", Tier.SSD, counts["ssd_fetch"], lay.ssd_bytes)
+        cost.add_compute(_COMPUTE_S_PER_CAND * n_cand)
+        return cost
+
+
+# ------------------------------------------------------- executor registry
+# Caches live ON the index instance (plain attributes), so their lifetime is
+# exactly the index's lifetime — the resulting index↔executor reference
+# cycle is ordinary gc fodder, with no process-global registry to leak.
+
+
+def _graph_for(index, *, degree: int = 16) -> graph_mod.GraphIndex:
+    """Build (once) and cache the kNN graph for an index's database."""
+    g = getattr(index, "_graph_cache", None)
+    if g is None:
+        g = graph_mod.build(index.x, degree=degree)
+        index._graph_cache = g
+    return g
+
+
+def make_executor(index, *, front: str = "ivf", backend: str = "reference",
+                  micro_batch: int | None = None, **front_opts
+                  ) -> SearchExecutor:
+    """Memoized executor factory — facade entry point.
+
+    Executors are cached per (index, front, backend, micro_batch) so the
+    compatibility wrappers in ``anns.pipeline`` and the serving layer can
+    call this on every request without rebuilding stages.
+    """
+    key = (front, backend, micro_batch, tuple(sorted(front_opts.items())))
+    cache = getattr(index, "_executor_cache", None)
+    if cache is None:
+        cache = {}
+        index._executor_cache = cache
+    ex = cache.get(key)
+    if ex is None:
+        ex = SearchExecutor.from_index(index, front=front, backend=backend,
+                                       micro_batch=micro_batch, **front_opts)
+        cache[key] = ex
+    return ex

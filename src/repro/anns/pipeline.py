@@ -1,32 +1,39 @@
-"""FaTRQ-augmented ANNS pipeline (paper Fig. 5).
+"""FaTRQ ANNS pipeline — compatibility facade over the staged executor.
 
-Stages (per query batch):
-  1. front stage  : IVF probe (or graph beam) + PQ-ADC coarse distances —
-                    fast-memory traffic (HBM on the accelerator, DRAM on CPU).
-  2. FaTRQ refine : stream packed ternary codes + scalars from FAR memory,
-                    progressive estimate, batched level-wise pruning.
-  3. final rerank : only survivors fetch full-precision vectors ("SSD"),
-                    exact L2, top-k.
+Since the staged-executor refactor the search datapath lives in
+``anns/stages.py`` (the pluggable front / refine / rerank stages) and
+``anns/executor.py`` (the ``SearchExecutor`` that runs them fully batched
+and folds device-side stage counters into a ``memory.QueryCost`` ledger).
+This module keeps the original public API stable:
 
-Every stage records traffic in a memory.QueryCost ledger; benchmarks turn
-ledgers into throughput via the Table-I tier model.  The baseline pipeline
-(no FaTRQ) reranks the whole candidate list from SSD — the paper's cuVS/
-FAISS comparison point.
+  * ``PipelineConfig`` / ``FaTRQIndex`` / ``build`` — offline index build
+    (PQ → IVF → TRQ encode → index-driven calibration, unchanged).
+  * ``search`` — FaTRQ staged search; now accepts ``front=`` ("ivf" |
+    "graph") and ``backend=`` ("reference" | "pallas") to select the
+    candidate generator and the refinement datapath, defaulting to the
+    config's settings.  Both backends produce identical top-k ids; "pallas"
+    runs the fused ``kernels.ternary_refine`` batched kernel.
+  * ``baseline_search`` — coarse ADC + full SSD rerank (cuVS/FAISS-style
+    comparison point), also executor-backed.
+  * ``recall_at_k`` — evaluation helper.
+
+See ``docs/architecture.md`` for the stage pipeline, backend selection,
+and QueryCost flow.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.anns.executor import make_executor
 from repro.core import trq as trq_mod
 from repro.core.trq import TRQCodes
 from repro.index import ivf as ivf_mod
-from repro.memory import QueryCost, RecordLayout, Tier
+from repro.memory import QueryCost, RecordLayout
 from repro.quant import pq as pq_mod
 
 
@@ -44,9 +51,12 @@ class PipelineConfig:
     z: float = 3.0
     calib_fraction: float = 0.003      # §III-E: ~0.3%
     calib_pairs_per_sample: int = 8
+    front: str = "ivf"                 # default front stage for search()
+    backend: str = "reference"         # default refinement backend
+    micro_batch: int | None = None     # queries per device step; None = all
 
 
-@dataclass
+@dataclass(eq=False)
 class FaTRQIndex:
     config: PipelineConfig
     codebook: pq_mod.PQCodebook
@@ -108,91 +118,31 @@ def build(key: jax.Array, x: jax.Array, config: PipelineConfig) -> FaTRQIndex:
 # ----------------------------------------------------------------- search
 
 
-@partial(jax.jit, static_argnames=("nprobe", "k", "bound", "z", "budget"))
-def _search_one(q, codebook, pq_codes, ivf, trq, x, *, nprobe, k, bound, z,
-                budget):
-    """Device part of one query: returns (topk_ids, n_cand, n_alive, n_ssd)."""
-    cand = ivf_mod.probe(ivf, q, nprobe=nprobe)               # (C,) w/ -1
-    valid = cand >= 0
-    safe = jnp.maximum(cand, 0)
-
-    table = pq_mod.adc_table(codebook, q)
-    d0 = pq_mod.adc_distances(table, pq_codes[safe])
-    d0 = jnp.where(valid, d0, jnp.inf)
-
-    state = trq_mod.progressive_search(q, d0, trq, safe, k=k, bound=bound,
-                                       z=z)
-    alive = state.alive & valid
-
-    # survivors ranked by refined estimate; cap SSD fetches at `budget`
-    est = jnp.where(alive, state.est, jnp.inf)
-    _, order = jax.lax.top_k(-est, budget)
-    fetch_ids = safe[order]
-    fetch_alive = alive[order]
-    d_exact = jnp.sum((x[fetch_ids] - q[None]) ** 2, axis=-1)
-    d_exact = jnp.where(fetch_alive, d_exact, jnp.inf)
-    _, best = jax.lax.top_k(-d_exact, k)
-    topk = fetch_ids[best]
-    return (topk, jnp.sum(valid), jnp.sum(alive),
-            jnp.minimum(jnp.sum(fetch_alive), budget))
-
-
 def search(index: FaTRQIndex, queries: jax.Array, *, k: int | None = None,
-           cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
-    """Batched FaTRQ search; returns (Q, k) ids + the traffic ledger."""
-    cfg = index.config
-    k = k or cfg.final_k
-    budget = cfg.refine_budget or max(4 * k, 32)
-    run = jax.vmap(lambda q: _search_one(
-        q, index.codebook, index.pq_codes, index.ivf, index.trq, index.x,
-        nprobe=cfg.nprobe, k=k, bound=cfg.bound, z=cfg.z, budget=budget))
-    topk, n_cand, n_alive, n_ssd = run(queries)
+           cost: QueryCost | None = None, front: str | None = None,
+           backend: str | None = None) -> tuple[jax.Array, QueryCost]:
+    """Batched FaTRQ search; returns (Q, k) ids + the traffic ledger.
 
-    cost = cost or QueryCost()
-    lay = index.layout
-    total_cand = int(jnp.sum(n_cand))
-    total_alive = int(jnp.sum(n_alive))
-    total_ssd = int(jnp.sum(n_ssd))
-    nq = queries.shape[0]
-    # stage 1: PQ codes + LUT from fast memory; 4B coarse distance handoff
-    cost.record("coarse", Tier.HBM, total_cand, lay.fast_bytes)
-    cost.record("handoff", Tier.CXL, total_cand, 4)
-    # stage 2: ALL candidates stream level-0 codes from far memory;
-    # deeper levels only for survivors of the previous level.
-    cost.record("refine", Tier.CXL, total_cand, lay.far_bytes)
-    for lv in range(1, cfg.trq_levels):
-        cost.record("refine", Tier.CXL, total_alive, lay.far_bytes)
-    # stage 3: survivors (≤ budget) hit SSD
-    cost.record("rerank", Tier.SSD, total_ssd, lay.ssd_bytes)
-    cost.add_compute(1e-7 * total_cand)   # ADC+ternary adds (measured scale)
-    return topk, cost
+    ``front`` / ``backend`` override the config's stage selection for this
+    call (e.g. ``backend="pallas"`` routes refinement through the fused
+    Pallas kernel).
+    """
+    cfg = index.config
+    ex = make_executor(index, front=front or cfg.front,
+                       backend=backend or cfg.backend,
+                       micro_batch=cfg.micro_batch)
+    return ex.search(queries, k=k, cost=cost)
 
 
 def baseline_search(index: FaTRQIndex, queries: jax.Array, *,
-                    k: int | None = None) -> tuple[jax.Array, QueryCost]:
+                    k: int | None = None, front: str | None = None
+                    ) -> tuple[jax.Array, QueryCost]:
     """SoTA baseline (cuVS/FAISS style): coarse ADC then rerank the FULL
     candidate list from SSD — no far-memory refinement."""
     cfg = index.config
-    k = k or cfg.final_k
-
-    @jax.jit
-    def one(q):
-        cand = ivf_mod.probe(index.ivf, q, nprobe=cfg.nprobe)
-        valid = cand >= 0
-        safe = jnp.maximum(cand, 0)
-        d = jnp.sum((index.x[safe] - q[None]) ** 2, axis=-1)
-        d = jnp.where(valid, d, jnp.inf)
-        _, best = jax.lax.top_k(-d, k)
-        return safe[best], jnp.sum(valid)
-
-    topk, n_cand = jax.vmap(one)(queries)
-    cost = QueryCost()
-    lay = index.layout
-    total = int(jnp.sum(n_cand))
-    cost.record("coarse", Tier.HBM, total, lay.fast_bytes)
-    cost.record("rerank", Tier.SSD, total, lay.ssd_bytes)
-    cost.add_compute(1e-7 * total)
-    return topk, cost
+    ex = make_executor(index, front=front or cfg.front,
+                       backend=cfg.backend, micro_batch=cfg.micro_batch)
+    return ex.search_baseline(queries, k=k)
 
 
 def recall_at_k(pred: jax.Array, gt: jax.Array, k: int) -> float:

@@ -1,0 +1,300 @@
+"""Pluggable search stages for the staged executor (paper Fig. 5).
+
+The search path is an explicit three-stage pipeline over query
+micro-batches — no per-query Python closures anywhere:
+
+  front   : candidate generation + coarse ADC scoring in fast memory.
+            Two interchangeable implementations: ``IVFFrontStage`` (inverted
+            lists, the paper's primary front) and ``GraphFrontStage``
+            (CAGRA-style beam search over PQ reconstructions).
+  refine  : FaTRQ progressive estimation over the candidate batch, streaming
+            packed ternary codes from far memory.  Two backends with
+            identical semantics: ``ReferenceRefineBackend`` (pure-jnp
+            ``core.estimator`` / ``trq.progressive_search`` math) and
+            ``PallasRefineBackend`` (the fused ``kernels.ternary_refine``
+            batched kernel + the same level-stacking/pruning on top).
+  rerank  : survivors fetch full-precision vectors ("SSD") for exact L2.
+
+Every stage returns *device-side* counters (0-d int32 arrays) alongside its
+arrays; the executor folds them into a ``memory.QueryCost`` ledger with one
+host transfer per search call (see ``executor.py``).  Stages also own their
+traffic model via ``fold_cost`` so the executor stays backend-agnostic.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import trq as trq_mod
+from repro.core.packing import unpack_ternary
+from repro.core.ternary import ternary_inner
+from repro.core.trq import TRQCodes
+from repro.index import graph as graph_mod
+from repro.index import ivf as ivf_mod
+from repro.kernels import ops as kernel_ops
+from repro.memory import QueryCost, RecordLayout, Tier
+from repro.quant import pq as pq_mod
+
+Counters = dict[str, jax.Array]     # name → 0-d device counter
+
+
+class Candidates(NamedTuple):
+    """Front-stage output for a query micro-batch."""
+
+    ids: jax.Array        # (Q, C) int32, clamped ≥ 0
+    valid: jax.Array      # (Q, C) bool
+    d0: jax.Array         # (Q, C) f32 coarse ADC distance, +inf if invalid
+    counters: Counters
+
+
+class Refined(NamedTuple):
+    """Refine-stage output: calibrated estimates + survivor mask."""
+
+    est: jax.Array        # (Q, C) f32
+    alive: jax.Array      # (Q, C) bool (already ∧ valid)
+    counters: Counters
+
+
+@runtime_checkable
+class FrontStage(Protocol):
+    """Candidate generation: batched queries in, Candidates out."""
+
+    name: str
+
+    def candidates(self, queries: jax.Array) -> Candidates: ...
+
+    def fold_cost(self, cost: QueryCost, counts: dict[str, int],
+                  layout: RecordLayout) -> None: ...
+
+
+@runtime_checkable
+class RefineBackend(Protocol):
+    """FaTRQ refinement over a candidate batch."""
+
+    name: str
+
+    def refine(self, queries: jax.Array, cand: Candidates, trq: TRQCodes,
+               *, k: int, bound: str, z: float) -> Refined: ...
+
+
+# ------------------------------------------------------------- front stages
+
+
+@partial(jax.jit, static_argnames=("nprobe",))
+def _ivf_candidates(ivf: ivf_mod.IVFIndex, codebook, pq_codes, queries, *,
+                    nprobe: int):
+    d = jnp.sum((queries[:, None, :] - ivf.centroids[None]) ** 2, axis=-1)
+    _, top_lists = jax.lax.top_k(-d, nprobe)                  # (Q, nprobe)
+    ids = ivf.lists[top_lists].reshape(queries.shape[0], -1)  # (Q, nprobe·cap)
+    valid = ids >= 0
+    safe = jnp.maximum(ids, 0)
+    tables = jax.vmap(lambda q: pq_mod.adc_table(codebook, q))(queries)
+    d0 = jax.vmap(pq_mod.adc_distances)(tables, pq_codes[safe])
+    d0 = jnp.where(valid, d0, jnp.inf)
+    return safe, valid, d0, jnp.sum(valid)
+
+
+@dataclass
+class IVFFrontStage:
+    """Inverted-file probe + PQ-ADC scoring (the paper's primary front)."""
+
+    ivf: ivf_mod.IVFIndex
+    codebook: pq_mod.PQCodebook
+    pq_codes: jax.Array
+    nprobe: int = 8
+    name: str = field(default="ivf", init=False)
+
+    def candidates(self, queries: jax.Array) -> Candidates:
+        safe, valid, d0, n_cand = _ivf_candidates(
+            self.ivf, self.codebook, self.pq_codes, queries,
+            nprobe=self.nprobe)
+        return Candidates(ids=safe, valid=valid, d0=d0,
+                          counters={"front_cand": n_cand})
+
+    def fold_cost(self, cost: QueryCost, counts: dict[str, int],
+                  layout: RecordLayout) -> None:
+        # PQ codes + LUT live in fast memory (HBM tier).
+        cost.record("coarse", Tier.HBM, counts["front_cand"],
+                    layout.fast_bytes)
+
+
+@partial(jax.jit, static_argnames=("iters", "beam", "expand"))
+def _graph_candidates(neighbors, x_score, codebook, pq_codes, queries, *,
+                      iters: int, beam: int, expand: int):
+    gidx = graph_mod.GraphIndex(neighbors=neighbors)
+    ids = jax.vmap(lambda q: graph_mod.search(gidx, x_score, q, iters=iters,
+                                              beam=beam, expand=expand))(
+        queries)                                              # (Q, beam)
+    valid = jnp.ones(ids.shape, bool)
+    tables = jax.vmap(lambda q: pq_mod.adc_table(codebook, q))(queries)
+    d0 = jax.vmap(pq_mod.adc_distances)(tables, pq_codes[ids])
+    nq = queries.shape[0]
+    return ids, valid, d0, jnp.asarray(nq * beam, jnp.int32)
+
+
+@dataclass
+class GraphFrontStage:
+    """CAGRA-style beam search scored on PQ reconstructions.
+
+    Traversal distances use the fast-memory PQ decode (no SSD touches); the
+    resulting beam is handed to refinement exactly like an IVF candidate
+    list.  ``hops`` counts graph-adjacency PQ fetches during traversal.
+    """
+
+    graph: graph_mod.GraphIndex
+    codebook: pq_mod.PQCodebook
+    pq_codes: jax.Array
+    beam: int = 64
+    iters: int = 32
+    expand: int = 4
+    name: str = field(default="graph", init=False)
+    x_score: jax.Array = field(init=False)
+
+    def __post_init__(self):
+        self.x_score = pq_mod.decode(self.codebook, self.pq_codes)
+
+    def candidates(self, queries: jax.Array) -> Candidates:
+        ids, valid, d0, n_cand = _graph_candidates(
+            self.graph.neighbors, self.x_score, self.codebook, self.pq_codes,
+            queries, iters=self.iters, beam=self.beam, expand=self.expand)
+        nq = queries.shape[0]
+        hops = jnp.asarray(nq * self.iters * self.expand * self.graph.degree,
+                           jnp.int32)
+        return Candidates(ids=ids, valid=valid, d0=d0,
+                          counters={"front_cand": n_cand,
+                                    "front_hops": hops})
+
+    def fold_cost(self, cost: QueryCost, counts: dict[str, int],
+                  layout: RecordLayout) -> None:
+        # Beam traversal decodes PQ codes of visited neighborhoods, then the
+        # final beam is ADC-scored — all fast-memory traffic.
+        cost.record("front", Tier.HBM, counts["front_hops"],
+                    layout.fast_bytes)
+        cost.record("coarse", Tier.HBM, counts["front_cand"],
+                    layout.fast_bytes)
+
+
+# ---------------------------------------------------------- refine backends
+
+
+@partial(jax.jit, static_argnames=("k", "bound", "z"))
+def _reference_refine(queries, d0, ids, valid, trq: TRQCodes, *, k: int,
+                      bound: str, z: float):
+    def one(q, d0_q, ids_q):
+        state = trq_mod.progressive_search(q, d0_q, trq, ids_q, k=k,
+                                           bound=bound, z=z)
+        return state.est, state.alive
+
+    est, alive = jax.vmap(one)(queries, d0, ids)
+    return est, alive & valid
+
+
+@dataclass
+class ReferenceRefineBackend:
+    """Pure-jnp estimator path (``core.estimator`` via progressive_search)."""
+
+    name: str = field(default="reference", init=False)
+
+    def refine(self, queries: jax.Array, cand: Candidates, trq: TRQCodes,
+               *, k: int, bound: str, z: float) -> Refined:
+        est, alive = _reference_refine(queries, cand.d0, cand.ids, cand.valid,
+                                       trq, k=k, bound=bound, z=z)
+        return Refined(est=est, alive=alive,
+                       counters={"refine_alive": jnp.sum(alive)})
+
+
+def _topk_threshold_batch(hi: jax.Array, alive: jax.Array, k: int
+                          ) -> jax.Array:
+    """Batched kth-smallest upper estimate among alive candidates (Q,)."""
+    masked = jnp.where(alive, hi, jnp.inf)
+    neg_top, _ = jax.lax.top_k(-masked, k)
+    return -neg_top[:, -1]
+
+
+@partial(jax.jit, static_argnames=("k", "bound", "z", "block_c"))
+def _pallas_refine(queries, d0, ids, valid, trq: TRQCodes, *, k: int,
+                   bound: str, z: float, block_c: int):
+    sc = trq.scalars
+    packed = trq.levels[0].packed[ids]                        # (Q, C, G)
+    out = kernel_ops.refine_scores_batch(
+        packed, queries, d0, sc.delta_sq[ids], sc.cross[ids], sc.norm[ids],
+        sc.rho[ids], trq.model.w, trq.model.bias, block_c=block_c)
+    est, est_raw, margin = out[..., 0], out[..., 1], out[..., 2]
+    if bound == "cauchy":
+        lo, hi = est_raw - margin, est_raw + margin
+    elif bound == "quantile":
+        m = z * trq.model.resid_std
+        lo, hi = est - m, est + m
+    else:
+        raise ValueError(f"unknown bound {bound!r}")
+    tau = _topk_threshold_batch(hi, valid, k)
+    alive = valid & (lo <= tau[:, None])
+
+    # Deeper TRQ levels: identical stacking math to trq.progressive_search,
+    # batched over queries (the kernel covers the hot level-0 stream).
+    if trq.num_levels > 1:
+        qn = jnp.linalg.norm(queries, axis=-1, keepdims=True)
+        for lv in range(1, trq.num_levels):
+            level = trq.levels[lv]
+            trits = unpack_ternary(level.packed[ids], trq.dim)
+            align = ternary_inner(trits, queries[:, None, :])
+            est = est - 2.0 * level.proj[ids] * align
+            rem = level.norm[ids] * jnp.sqrt(
+                jnp.clip(1.0 - level.rho[ids] ** 2, 0.0, 1.0))
+            marg = 2.0 * qn * rem + trq.model.resid_std
+            tau = _topk_threshold_batch(est + marg, alive, k)
+            alive = alive & (est - marg <= tau[:, None])
+    return est, alive
+
+
+@dataclass
+class PallasRefineBackend:
+    """Fused-kernel path (``kernels.ternary_refine`` batched grid).
+
+    Produces the same estimates/survivors as the reference backend (the
+    kernel is tested against ``core.estimator.refine_level`` bit-for-bit at
+    f32 tolerance); on CPU containers the kernel runs in interpret mode.
+    """
+
+    block_c: int = 512
+    name: str = field(default="pallas", init=False)
+
+    def refine(self, queries: jax.Array, cand: Candidates, trq: TRQCodes,
+               *, k: int, bound: str, z: float) -> Refined:
+        est, alive = _pallas_refine(queries, cand.d0, cand.ids, cand.valid,
+                                    trq, k=k, bound=bound, z=z,
+                                    block_c=self.block_c)
+        return Refined(est=est, alive=alive,
+                       counters={"refine_alive": jnp.sum(alive)})
+
+
+# ----------------------------------------------------------------- rerank
+
+
+@partial(jax.jit, static_argnames=("k", "budget"))
+def _rerank_survivors(x, queries, ids, est, alive, *, k: int, budget: int):
+    """Batched exact rerank: top-`budget` survivors by estimate fetch full
+    vectors, exact L2, top-k.  Returns (topk_ids, n_ssd)."""
+    est_m = jnp.where(alive, est, jnp.inf)
+    _, order = jax.lax.top_k(-est_m, budget)                  # (Q, budget)
+    fetch_ids = jnp.take_along_axis(ids, order, axis=1)
+    fetch_alive = jnp.take_along_axis(alive, order, axis=1)
+    d = jnp.sum((x[fetch_ids] - queries[:, None, :]) ** 2, axis=-1)
+    d = jnp.where(fetch_alive, d, jnp.inf)
+    _, best = jax.lax.top_k(-d, k)
+    topk = jnp.take_along_axis(fetch_ids, best, axis=1)
+    return topk, jnp.sum(fetch_alive)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def _rerank_all(x, queries, ids, valid, *, k: int):
+    """Baseline rerank: exact L2 over the whole candidate list (no refine)."""
+    d = jnp.sum((x[ids] - queries[:, None, :]) ** 2, axis=-1)
+    d = jnp.where(valid, d, jnp.inf)
+    _, best = jax.lax.top_k(-d, k)
+    return jnp.take_along_axis(ids, best, axis=1), jnp.sum(valid)

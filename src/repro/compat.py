@@ -1,0 +1,19 @@
+"""Version-compatibility shims for the pinned jax.
+
+``jax.shard_map`` only exists from jax 0.5; the container pins jax 0.4.37
+where the API lives at ``jax.experimental.shard_map.shard_map``.  Import it
+from here so call sites work on both:
+
+    from repro.compat import shard_map
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:
+    from jax.experimental.shard_map import shard_map
+
+__all__ = ["shard_map"]

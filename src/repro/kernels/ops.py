@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.pq_adc import pq_adc
-from repro.kernels.ternary_refine import ternary_refine
+from repro.kernels.ternary_refine import ternary_refine, ternary_refine_batch
 
 _ON_TPU = jax.default_backend() == "tpu"
 
@@ -25,6 +25,15 @@ def _pad_rows(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
     pad = (-c) % mult
     if pad:
         x = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x, c
+
+
+def _pad_axis1(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    c = x.shape[1]
+    pad = (-c) % mult
+    if pad:
+        widths = [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)
+        x = jnp.pad(x, widths)
     return x, c
 
 
@@ -50,6 +59,35 @@ def refine_scores(packed: jax.Array, q: jax.Array, d0: jax.Array,
     out = ternary_refine(packed_p, q_planes, scalars_p, params,
                          block_c=block_c, interpret=not _ON_TPU)
     return out[:c0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def refine_scores_batch(packed: jax.Array, q: jax.Array, d0: jax.Array,
+                        delta_sq: jax.Array, cross: jax.Array,
+                        norm: jax.Array, rho: jax.Array, w: jax.Array,
+                        bias: jax.Array, *, block_c: int = 512) -> jax.Array:
+    """Fused refine over a query micro-batch → (Q, C, 3).
+
+    packed (Q, C, G) per-query gathered codes, q (Q, D), per-record scalars
+    (Q, C); calibration w (4,) + bias are shared across queries.  Same math
+    as ``refine_scores`` run once per query, in a single kernel launch.
+    """
+    nq, c, g = packed.shape
+    q32 = q.astype(jnp.float32)
+    q_planes = jax.vmap(lambda qq: ref.make_query_planes(qq, g))(q32)
+    scalars = jnp.stack([d0, delta_sq, cross, norm, rho] +
+                        [jnp.zeros_like(d0)] * 3, axis=-1)     # (Q, C, 8)
+    qn = jnp.linalg.norm(q32, axis=-1)                          # (Q,)
+    wb = jnp.concatenate([w.astype(jnp.float32),
+                          bias[None].astype(jnp.float32),
+                          jnp.zeros((2,), jnp.float32)])
+    params = jnp.concatenate([qn[:, None],
+                              jnp.broadcast_to(wb, (nq, 7))], axis=1)  # (Q,8)
+    packed_p, c0 = _pad_axis1(packed, block_c)
+    scalars_p, _ = _pad_axis1(scalars.astype(jnp.float32), block_c)
+    out = ternary_refine_batch(packed_p, q_planes, scalars_p, params,
+                               block_c=block_c, interpret=not _ON_TPU)
+    return out[:, :c0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_c",))

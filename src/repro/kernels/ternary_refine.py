@@ -27,30 +27,33 @@ from jax.experimental import pallas as pl
 _POW3 = (1, 3, 9, 27, 81)
 
 
-def _refine_kernel(packed_ref, qplanes_ref, scal_ref, params_ref, out_ref):
-    """One candidate block: (BC, G) bytes → (BC, 3) [est, est_raw, margin]."""
-    y = packed_ref[...].astype(jnp.int32)          # (BC, G)
-    qn = params_ref[0, 0]
-    w0, w1, w2, w3, bias = (params_ref[0, 1], params_ref[0, 2],
-                            params_ref[0, 3], params_ref[0, 4],
-                            params_ref[0, 5])
+def _score_block(y, qplanes, scal, params):
+    """Shared scoring math: one candidate block of one query.
+
+    y (BC, G) int32 packed bytes, qplanes (5, G), scal (BC, 8), params (8,)
+    → (est, est_raw, margin), each (BC,).  Both kernels call this; only the
+    ref slicing differs between the single-query and batched grids.
+    """
+    qn = params[0]
+    w0, w1, w2, w3, bias = params[1], params[2], params[3], params[4], \
+        params[5]
 
     acc = jnp.zeros(y.shape, jnp.float32)
     kcnt = jnp.zeros(y.shape, jnp.int32)
     for i in range(5):
         digit = (y // _POW3[i]) % 3 - 1            # (BC, G) ∈ {-1,0,1}
         trit = digit.astype(jnp.float32)
-        acc = acc + trit * qplanes_ref[i, :][None, :]
+        acc = acc + trit * qplanes[i, :][None, :]
         kcnt = kcnt + digit * digit
     raw = jnp.sum(acc, axis=1)                     # Σ c·q        (BC,)
     k = jnp.sum(kcnt, axis=1).astype(jnp.float32)  # ||c||²       (BC,)
     align = raw / jnp.sqrt(jnp.maximum(k, 1.0))    # Σ c·q / √k
 
-    d0 = scal_ref[:, 0]
-    delta_sq = scal_ref[:, 1]
-    cross = scal_ref[:, 2]
-    norm = scal_ref[:, 3]
-    rho = scal_ref[:, 4]
+    d0 = scal[:, 0]
+    delta_sq = scal[:, 1]
+    cross = scal[:, 2]
+    norm = scal[:, 3]
+    rho = scal[:, 4]
 
     e_align = align / jnp.maximum(qn, 1e-30)
     d_ip = -2.0 * norm * rho * align
@@ -59,9 +62,67 @@ def _refine_kernel(packed_ref, qplanes_ref, scal_ref, params_ref, out_ref):
     margin = (2.0 * qn * norm
               * jnp.sqrt(jnp.clip(1.0 - e_align * e_align, 0.0, 1.0))
               * jnp.sqrt(jnp.clip(1.0 - rho * rho, 0.0, 1.0)))
+    return est, est_raw, margin
+
+
+def _refine_kernel(packed_ref, qplanes_ref, scal_ref, params_ref, out_ref):
+    """One candidate block: (BC, G) bytes → (BC, 3) [est, est_raw, margin]."""
+    est, est_raw, margin = _score_block(packed_ref[...].astype(jnp.int32),
+                                        qplanes_ref[...], scal_ref[...],
+                                        params_ref[0])
     out_ref[:, 0] = est
     out_ref[:, 1] = est_raw
     out_ref[:, 2] = margin
+
+
+def _refine_kernel_batch(packed_ref, qplanes_ref, scal_ref, params_ref,
+                         out_ref):
+    """Query-batched variant: block shapes carry a leading (1,) query dim.
+
+    Grid is (Q, C/BC); each step scores one candidate block of one query, so
+    a whole micro-batch of queries runs as a single kernel launch — the
+    executor's batched refinement datapath.
+    """
+    est, est_raw, margin = _score_block(packed_ref[0].astype(jnp.int32),
+                                        qplanes_ref[0], scal_ref[0],
+                                        params_ref[0])
+    out_ref[0, :, 0] = est
+    out_ref[0, :, 1] = est_raw
+    out_ref[0, :, 2] = margin
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def ternary_refine_batch(packed: jax.Array, q_planes: jax.Array,
+                         scalars: jax.Array, params: jax.Array, *,
+                         block_c: int = 512, interpret: bool = True
+                         ) -> jax.Array:
+    """Multi-query fused refine: one launch scores Q×C candidates.
+
+    packed (Q, C, G) uint8 — per-query gathered codes; q_planes (Q, 5, G);
+    scalars (Q, C, 8) f32 [d0, ||δ||², ⟨x_c,δ⟩, ||δ||, rho, 0…];
+    params (Q, 8) f32 [qn, w0..w3, b, 0, 0] (w/b normally shared, qn per
+    query) → (Q, C, 3) f32 [est, est_raw, margin].
+
+    C must be a multiple of block_c (ops.py pads).  The grid walks queries
+    in the outer dimension so each query's candidate blocks stream through
+    VMEM back-to-back with its (5, G) digit planes held resident.
+    """
+    nq, c, g = packed.shape
+    assert c % block_c == 0, (c, block_c)
+    grid = (nq, c // block_c)
+    return pl.pallas_call(
+        _refine_kernel_batch,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, g), lambda qi, ci: (qi, ci, 0)),
+            pl.BlockSpec((1, 5, g), lambda qi, ci: (qi, 0, 0)),
+            pl.BlockSpec((1, block_c, 8), lambda qi, ci: (qi, ci, 0)),
+            pl.BlockSpec((1, 8), lambda qi, ci: (qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, 4), lambda qi, ci: (qi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((nq, c, 4), jnp.float32),
+        interpret=interpret,
+    )(packed, q_planes, scalars, params)[..., :3]
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))

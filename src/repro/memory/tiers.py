@@ -80,15 +80,25 @@ class QueryCost:
         self.compute_s += seconds
 
     def tier_seconds(self, tier: Tier) -> float:
+        """Time a tier spends serving this ledger's traffic.
+
+        Overlap model: within a stage, accesses pipeline up to the tier's
+        queue parallelism (SSD QD, CXL banks), so the latency term amortizes
+        to ``accesses · latency / parallelism`` while data streams at the
+        sustained bandwidth.  Latency and transfer fully overlap — the stage
+        is bound by whichever is larger, hence ``max(lat, bw)`` (not the
+        sum): a deep-queued tier hides per-access latency behind streaming,
+        and a latency-bound tier hides the (smaller) transfer time inside
+        its access pipeline.
+        """
         spec = self.model[tier]
         total = 0.0
         for key, t in self.ledger.items():
             if not key.endswith(tier.value):
                 continue
-            # latency term amortized by queue parallelism + bandwidth term
             lat = t.accesses * spec.latency_s / spec.parallelism
             bw = t.bytes / spec.bandwidth_Bps
-            total += max(lat, bw) + min(lat, bw) * 0.0  # overlapped
+            total += max(lat, bw)
         return total
 
     def total_seconds(self) -> float:
@@ -101,6 +111,18 @@ class QueryCost:
         out = {t.value: self.tier_seconds(t) for t in Tier}
         out["compute"] = self.compute_s
         return out
+
+    def merge(self, other: "QueryCost") -> "QueryCost":
+        """Fold another ledger's traffic + compute into this one (in place).
+
+        Used by serving to keep a running total across request batches.
+        """
+        for key, t in other.ledger.items():
+            mine = self.ledger.setdefault(key, Traffic())
+            mine.accesses += t.accesses
+            mine.bytes += t.bytes
+        self.compute_s += other.compute_s
+        return self
 
     def copy(self) -> "QueryCost":
         c = QueryCost(model=dict(self.model))

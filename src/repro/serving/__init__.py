@@ -1,3 +1,3 @@
-from repro.serving.engine import Engine, rag_answer
+from repro.serving.engine import Engine, Retriever, rag_answer
 
-__all__ = ["Engine", "rag_answer"]
+__all__ = ["Engine", "Retriever", "rag_answer"]

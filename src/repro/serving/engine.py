@@ -1,6 +1,13 @@
 """Batched serving engine: continuous-batching decode over a KV cache,
 plus the RAG loop that couples the LM with the FaTRQ retriever (paper
 Fig. 1: embed prompt → ANNS → feed retrieved context to the LM).
+
+Retrieval goes through the staged ``SearchExecutor`` (anns/executor.py)
+with query micro-batching: a serving batch of B prompts is split into
+device-sized micro-batches so retrieval latency stays flat as B grows and
+the executor's stage counters aggregate into one QueryCost per request
+batch.  ``Retriever`` wraps the executor with serving defaults (front
+stage, refinement backend, micro-batch size) and keeps a running ledger.
 """
 
 from __future__ import annotations
@@ -9,9 +16,10 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.anns.pipeline import FaTRQIndex, search
+from repro.anns.executor import make_executor
+from repro.anns.pipeline import FaTRQIndex
+from repro.memory import QueryCost
 from repro.models.model_zoo import ModelApi
 
 
@@ -53,12 +61,40 @@ class Engine:
         return jnp.stack(out, axis=1)
 
 
+@dataclass
+class Retriever:
+    """Serving-side wrapper: staged executor + micro-batching + ledger.
+
+    ``total_cost`` accumulates traffic across requests (capacity-planning
+    view); each ``retrieve`` also returns the per-call QueryCost.
+    """
+
+    index: FaTRQIndex
+    front: str = "ivf"
+    backend: str = "reference"
+    micro_batch: int | None = 8
+    total_cost: QueryCost = field(default_factory=QueryCost)
+
+    def retrieve(self, queries: jax.Array, *, k: int
+                 ) -> tuple[jax.Array, QueryCost]:
+        ex = make_executor(self.index, front=self.front,
+                           backend=self.backend,
+                           micro_batch=self.micro_batch)
+        ids, cost = ex.search(queries, k=k)
+        self.total_cost.merge(cost)
+        return ids, cost
+
+
 def rag_answer(engine: Engine, index: FaTRQIndex, embed_fn, prompt_tokens,
-               *, k: int = 5, decode_steps: int = 8):
+               *, k: int = 5, decode_steps: int = 8,
+               retriever: Retriever | None = None, micro_batch: int = 8):
     """One RAG round-trip: embed the prompt, FaTRQ-retrieve top-k context
-    ids, prepend them (stub tokenization: ids mod vocab), decode."""
+    ids through the staged executor (micro-batched), prepend them (stub
+    tokenization: ids mod vocab), decode."""
     q = embed_fn(prompt_tokens)                       # (B, D) embeddings
-    ids, cost = search(index, q, k=k)
+    if retriever is None:
+        retriever = Retriever(index=index, micro_batch=micro_batch)
+    ids, cost = retriever.retrieve(q, k=k)
     engine.stats.retrievals += q.shape[0]
     # stub contextualization: retrieved ids become context tokens
     ctx = (ids % engine.api.cfg.vocab).astype(jnp.int32)

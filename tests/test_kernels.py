@@ -4,8 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from compat import given, settings, st
 
 from repro.core.packing import pack_ternary, packed_size
 from repro.core.ternary import ternary_encode
@@ -74,6 +74,64 @@ class TestTernaryRefineKernel:
         assert out.shape == (c, 3)
         np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                    rtol=3e-5, atol=3e-5)
+
+    # dims not divisible by 5 (packing pad) × candidate counts not divisible
+    # by block_c (ops.py row pad): the kernel must agree with the reference
+    # estimator path on est, est_raw (→ lo), and margin.
+    @pytest.mark.parametrize("c,d,block_c", [(130, 63, 64), (300, 77, 128),
+                                             (65, 129, 64), (513, 251, 256)])
+    def test_parity_with_estimator_odd_shapes(self, c, d, block_c):
+        from repro.core.calibration import CalibrationModel
+        from repro.core.decomposition import RecordScalars
+        from repro.core.estimator import refine_level
+        from repro.core.packing import unpack_ternary
+
+        packed, q, d0, delta_sq, cross, norm, rho, w, bias = _setup_refine(
+            c, d, seed=c * d)
+        out = refine_scores(packed, q, d0, delta_sq, cross, norm, rho, w,
+                            bias, block_c=block_c)
+        model = CalibrationModel(w=w, bias=bias, resid_std=jnp.asarray(0.0))
+        scalars = RecordScalars(delta_sq=delta_sq, cross=cross, rho=rho,
+                                norm=norm)
+        state = refine_level(q, d0, scalars, unpack_ternary(packed, d),
+                             model, k=10)
+        assert out.shape == (c, 3)
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(state.est), rtol=2e-5,
+                                   atol=2e-5)
+        np.testing.assert_allclose(np.asarray(out[:, 1] - out[:, 2]),
+                                   np.asarray(state.lo), rtol=2e-5,
+                                   atol=2e-5)
+
+
+class TestBatchedRefineKernel:
+    @pytest.mark.parametrize("nq,c,d,block_c", [(3, 130, 63, 64),
+                                                (5, 512, 100, 256),
+                                                (1, 7, 11, 64)])
+    def test_matches_per_query_kernel(self, nq, c, d, block_c):
+        from repro.kernels.ops import refine_scores_batch
+
+        per_query = []
+        packed_b, d0_b, dsq_b, cross_b, norm_b, rho_b, q_b = \
+            [], [], [], [], [], [], []
+        for i in range(nq):
+            packed, q, d0, delta_sq, cross, norm, rho, w, bias = \
+                _setup_refine(c, d, seed=100 + i)
+            per_query.append(refine_scores(packed, q, d0, delta_sq, cross,
+                                           norm, rho, w, bias,
+                                           block_c=block_c))
+            packed_b.append(packed); q_b.append(q); d0_b.append(d0)
+            dsq_b.append(delta_sq); cross_b.append(cross)
+            norm_b.append(norm); rho_b.append(rho)
+        out = refine_scores_batch(jnp.stack(packed_b), jnp.stack(q_b),
+                                  jnp.stack(d0_b), jnp.stack(dsq_b),
+                                  jnp.stack(cross_b), jnp.stack(norm_b),
+                                  jnp.stack(rho_b), w, bias,
+                                  block_c=block_c)
+        assert out.shape == (nq, c, 3)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(jnp.stack(per_query)),
+                                   rtol=2e-5, atol=2e-5)
 
 
 class TestADCKernel:

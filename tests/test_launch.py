@@ -8,8 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from compat import given, settings, st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCHS, SHAPES, shape_applicable

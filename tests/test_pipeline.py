@@ -105,6 +105,26 @@ class TestPipeline:
 
 
 class TestCostModel:
+    def test_overlap_model_is_max_of_latency_and_bandwidth(self):
+        # tier_seconds uses max(lat, bw): queue-amortized access latency and
+        # streaming transfer fully overlap — the stage is bound by whichever
+        # is larger, never their sum.
+        spec = QueryCost().model[Tier.CXL]
+        # latency-bound: many minimum-grain accesses
+        c = QueryCost()
+        c.record("s", Tier.CXL, 100_000, 1)
+        lat = 100_000 * spec.latency_s / spec.parallelism
+        bw = 100_000 * spec.min_grain_B / spec.bandwidth_Bps
+        assert lat > bw
+        assert c.tier_seconds(Tier.CXL) == pytest.approx(max(lat, bw))
+        # bandwidth-bound: few huge transfers
+        c2 = QueryCost()
+        c2.record("s", Tier.CXL, 10, 10_000_000)
+        lat2 = 10 * spec.latency_s / spec.parallelism
+        bw2 = 10 * 10_000_000 / spec.bandwidth_Bps
+        assert bw2 > lat2
+        assert c2.tier_seconds(Tier.CXL) == pytest.approx(max(lat2, bw2))
+
     def test_tier_ordering(self):
         c = QueryCost()
         c.record("s", Tier.SSD, 100, 4096)
