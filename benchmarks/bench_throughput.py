@@ -1,5 +1,7 @@
 """Fig. 6 — end-to-end throughput: FaTRQ-SW / FaTRQ-HW vs SSD-rerank
-baseline, on IVF and CAGRA front stages, at matched recall.
+baseline, on IVF and CAGRA front stages, at matched recall — plus the
+scale-out sweep: the same database sharded 1/2/4/8 ways across a
+host-platform ``("search",)`` mesh through ``anns.sharding``.
 
 Absolute times come from the Table-I tier cost model (the container has no
 CXL/SSD on the hot path — same methodology as the paper's Ramulator +
@@ -7,13 +9,44 @@ datasheet simulation).  -SW places residual codes in CXL memory with host
 filtering (codes cross the CXL link, host CPU scores them); -HW offloads
 filtering into the CXL Type-2 accelerator (device-local access, 3.7×
 faster filtering per §V-B, only 4 B coarse distances + survivor ids cross
-the link).
+the link).  Sharded times fold per-shard ledgers with
+``QueryCost.merge_parallel`` (slowest lane bounds the batch), so the sweep
+shows the parallel-shard speedup the paper reaches by replicating
+far-memory channels.
+
+Standalone: ``python benchmarks/bench_throughput.py --shards 8`` fakes 8
+host devices (must be set before jax initializes) and writes
+``BENCH_bench_throughput.json``.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import dataset, emit, fatrq_index
+import sys
+
+if __name__ == "__main__":          # must run BEFORE anything imports jax
+    import argparse
+    import os
+
+    _ap = argparse.ArgumentParser()
+    _ap.add_argument("--shards", type=int, default=None,
+                     help="max shard count for the scale-out sweep; fakes "
+                          "that many host devices")
+    _CLI_ARGS = _ap.parse_args()
+    if _CLI_ARGS.shards and _CLI_ARGS.shards > 1 and \
+            "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={_CLI_ARGS.shards}"
+        ).strip()
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [os.path.join(_root, "src"), _root]
+
+import jax
+
+from benchmarks.common import dataset, emit, fatrq_index, write_json
 from repro.anns import make_executor, recall_at_k
+from repro.anns.sharding import make_sharded_executor
 from repro.memory import QueryCost
 
 # host-CPU vs accelerator per-candidate filtering cost (calibrated to the
@@ -44,7 +77,27 @@ def _fatrq_cost(index, queries, *, hw: bool, front: str = "ivf"
     return rec, cost
 
 
-def run() -> None:
+def _shard_sweep(ds, index, *, max_shards: int | None) -> None:
+    """Scale-out: shard the database across the host-platform mesh and
+    report model-time QPS per shard count (parallel-shard fold)."""
+    q = ds.queries
+    nq = q.shape[0]
+    avail = len(jax.devices())
+    limit = min(max_shards or avail, avail, index.ivf.nlist)
+    counts = [s for s in (1, 2, 4, 8, 16) if s <= limit]
+    t1 = None
+    for s in counts:
+        ex = make_sharded_executor(index, shards=s)
+        pred, cost = ex.search(q, k=10)
+        rec = recall_at_k(pred, ds.gt, 10)
+        t = cost.total_seconds()
+        t1 = t if t1 is None else t1
+        emit(f"fig6_sharded_{s}x_qps", t / nq * 1e6,
+             f"recall={rec:.3f};scaleup={t1 / t:.2f}x", cost=cost,
+             qps=nq / t, shards=s)
+
+
+def run(*, max_shards: int | None = None) -> None:
     ds, index = fatrq_index()
     q = ds.queries
 
@@ -59,12 +112,13 @@ def run() -> None:
 
     nq = q.shape[0]
     emit("fig6_ivf_baseline_qps", t_base / nq * 1e6,
-         f"recall={base_rec:.3f}")
+         f"recall={base_rec:.3f}", cost=base_cost, qps=nq / t_base)
     emit("fig6_ivf_fatrq_sw_qps", t_sw / nq * 1e6,
-         f"recall={rec_sw:.3f};speedup={t_base / t_sw:.2f}x")
+         f"recall={rec_sw:.3f};speedup={t_base / t_sw:.2f}x",
+         cost=cost_sw, qps=nq / t_sw)
     emit("fig6_ivf_fatrq_hw_qps", t_hw / nq * 1e6,
          f"recall={rec_hw:.3f};speedup={t_base / t_hw:.2f}x;"
-         f"hw_over_sw={t_sw / t_hw:.2f}x")
+         f"hw_over_sw={t_sw / t_hw:.2f}x", cost=cost_hw, qps=nq / t_hw)
 
     # --- CAGRA-style graph front stage through the same executor (fewer
     # candidates → smaller gain, matching the paper's IVF-vs-CAGRA ordering)
@@ -76,10 +130,16 @@ def run() -> None:
     rec_gf, cost_gf = _fatrq_cost(index, q, hw=True, front="graph")
     t_gf = cost_gf.total_seconds()
     emit("fig6_cagra_baseline_qps", t_gbase / nq * 1e6,
-         f"recall={gbase_rec:.3f}")
+         f"recall={gbase_rec:.3f}", cost=cost_gb, qps=nq / t_gbase)
     emit("fig6_cagra_fatrq_hw_qps", t_gf / nq * 1e6,
-         f"recall={rec_gf:.3f};speedup={t_gbase / t_gf:.2f}x")
+         f"recall={rec_gf:.3f};speedup={t_gbase / t_gf:.2f}x",
+         cost=cost_gf, qps=nq / t_gf)
+
+    # --- scale-out sweep through the sharded subsystem
+    _shard_sweep(ds, index, max_shards=max_shards)
 
 
 if __name__ == "__main__":
-    run()
+    print("name,us_per_call,derived")
+    run(max_shards=_CLI_ARGS.shards)
+    write_json("bench_throughput")

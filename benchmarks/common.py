@@ -1,8 +1,17 @@
-"""Shared benchmark setup: datasets, indexes, timing helpers, CSV output."""
+"""Shared benchmark setup: datasets, indexes, timing helpers, CSV + JSON
+output.
+
+Besides the human-readable ``name,us_per_call,derived`` CSV rows, every
+``emit`` also appends a structured record (optionally carrying a QueryCost
+breakdown and extra fields like qps/shards); ``write_json`` drains the
+records accumulated since the last call into a machine-readable
+``BENCH_<bench>.json`` so the perf trajectory is tracked across PRs.
+"""
 
 from __future__ import annotations
 
 import functools
+import json
 import time
 
 import jax
@@ -10,14 +19,42 @@ import jax.numpy as jnp
 
 from repro.anns import PipelineConfig, build
 from repro.data import make_dataset
+from repro.memory import QueryCost
 
 ROWS: list[str] = []
+RECORDS: list[dict] = []
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def emit(name: str, us_per_call: float, derived: str = "",
+         cost: QueryCost | None = None, **fields) -> None:
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
     print(row)
+    rec: dict = {"name": name, "us_per_call": us_per_call}
+    if derived:
+        rec["derived"] = derived
+    if cost is not None:
+        rec["cost_breakdown_s"] = cost.breakdown()
+        rec["cost_total_s"] = cost.total_seconds()
+    rec.update(fields)
+    RECORDS.append(rec)
+
+
+def take_records() -> list[dict]:
+    """Drain the structured records accumulated since the last drain."""
+    out = list(RECORDS)
+    RECORDS.clear()
+    return out
+
+
+def write_json(bench: str, path: str | None = None) -> str:
+    """Write the drained records to ``BENCH_<bench>.json`` (or ``path``)."""
+    path = path or f"BENCH_{bench}.json"
+    payload = {"bench": bench, "records": take_records()}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
+    return path
 
 
 def time_call(fn, *args, iters: int = 5, warmup: int = 2) -> float:

@@ -1,6 +1,9 @@
 """Benchmark harness — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV rows (benchmarks/common.emit) and
+writes one machine-readable ``BENCH_<module>.json`` per bench (per-row
+timing, QPS where applicable, and QueryCost breakdowns) so the perf
+trajectory is tracked across PRs.
 """
 
 from __future__ import annotations
@@ -12,15 +15,18 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_arch_dims, bench_distortion,
                             bench_kernels, bench_refinement, bench_storage,
-                            bench_throughput)
+                            bench_throughput, common)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in [bench_storage, bench_arch_dims, bench_kernels,
                 bench_distortion, bench_throughput, bench_refinement]:
+        short = mod.__name__.rsplit(".", 1)[-1]
         try:
             mod.run()
+            common.write_json(short)
         except Exception:
+            common.take_records()    # drop partial records of the failure
             failures += 1
             print(f"# FAILED {mod.__name__}", file=sys.stderr)
             traceback.print_exc()

@@ -1,6 +1,32 @@
+"""FaTRQ ANNS package — staged search over a tiered-memory index.
+
+Layers, bottom-up:
+
+* ``stages`` — pluggable front stages (IVF, graph) and refine backends
+  (reference jnp, fused Pallas kernel), each emitting device-side traffic
+  counters; ``axis_name`` switches the pruning thresholds to global
+  (all-gathered) operation inside a ``shard_map``.
+* ``executor`` — ``SearchExecutor`` runs front → refine → rerank fully
+  batched over query micro-batches and folds the counters into a
+  ``memory.QueryCost`` ledger with one host transfer per search.
+* ``sharding`` — scale-out: ``partition_database`` splits whole IVF lists
+  across shards, ``ShardedIndex`` places the stacked arrays on a 1-D
+  ``("search",)`` mesh, and ``ShardedExecutor`` runs the same stages per
+  shard under ``shard_map``, merging per-shard top-k and folding per-shard
+  ledgers with ``QueryCost.merge_parallel`` (max time, summed bytes).
+  Top-k ids are bit-identical to the unsharded executor (up to exact-f32
+  estimate ties at the SSD budget boundary, e.g. duplicate rows — see
+  ``sharding._rerank_survivors_sharded``).
+* ``pipeline`` — the stable facade: ``build`` (offline index build) and
+  ``search(..., front=, backend=, shards=)`` / ``baseline_search`` /
+  ``recall_at_k``.
+"""
+
 from repro.anns.executor import SearchExecutor, make_executor
 from repro.anns.pipeline import (FaTRQIndex, PipelineConfig, baseline_search,
                                  build, recall_at_k, search)
+from repro.anns.sharding import (ShardedExecutor, ShardedIndex,
+                                 make_sharded_executor, partition_database)
 from repro.anns.stages import (Candidates, FrontStage, GraphFrontStage,
                                IVFFrontStage, PallasRefineBackend, Refined,
                                RefineBackend, ReferenceRefineBackend)
@@ -8,6 +34,8 @@ from repro.anns.stages import (Candidates, FrontStage, GraphFrontStage,
 __all__ = ["FaTRQIndex", "PipelineConfig", "baseline_search", "build",
            "recall_at_k", "search",
            "SearchExecutor", "make_executor",
+           "ShardedExecutor", "ShardedIndex", "make_sharded_executor",
+           "partition_database",
            "Candidates", "Refined", "FrontStage", "RefineBackend",
            "IVFFrontStage", "GraphFrontStage",
            "ReferenceRefineBackend", "PallasRefineBackend"]

@@ -42,6 +42,23 @@ def _accumulate(total: Counters, new: Counters) -> Counters:
     return total
 
 
+def search_budget(config, k: int) -> int:
+    """SSD rerank budget for a search call: the configured budget, with a
+    4k/32 default, floored at k (k results need ≥ k fetches).  Shared by
+    the unsharded and sharded executors — their top-k equivalence depends
+    on deriving the SAME budget."""
+    return max(config.refine_budget or max(4 * k, 32), k)
+
+
+def iter_chunks(queries: jax.Array, micro_batch: int | None):
+    """Split a query batch into device-sized micro-batches (None = all)."""
+    if micro_batch is None or micro_batch >= queries.shape[0]:
+        yield queries
+        return
+    for i in range(0, queries.shape[0], micro_batch):
+        yield queries[i:i + micro_batch]
+
+
 def _collect(counters: Counters) -> dict[str, int]:
     """The single device→host transfer of a search call."""
     return {n: int(v) for n, v in
@@ -92,20 +109,14 @@ class SearchExecutor:
     # -- search -----------------------------------------------------------
 
     def _chunks(self, queries: jax.Array):
-        mb = self.micro_batch
-        if mb is None or mb >= queries.shape[0]:
-            yield queries
-            return
-        for i in range(0, queries.shape[0], mb):
-            yield queries[i:i + mb]
+        return iter_chunks(queries, self.micro_batch)
 
     def search(self, queries: jax.Array, *, k: int | None = None,
                cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
         """FaTRQ search: returns (Q, k) ids + the folded traffic ledger."""
         cfg = self.index.config
         k = k or cfg.final_k
-        # k results need ≥ k fetches, whatever the configured budget
-        budget = max(cfg.refine_budget or max(4 * k, 32), k)
+        budget = search_budget(cfg, k)
 
         topk_parts: list[jax.Array] = []
         counters: Counters = {}
@@ -157,24 +168,40 @@ class SearchExecutor:
     def _fold(self, counters: Counters, cost: QueryCost | None) -> QueryCost:
         """One host transfer: device counters → Table-I traffic ledger."""
         counts = _collect(counters)
-        cost = cost or QueryCost()
-        cfg = self.index.config
-        lay = self.index.layout
-        n_cand = counts["front_cand"]
-        n_alive = counts["refine_alive"]
+        return fold_counts(counts, cost=cost, config=self.index.config,
+                           layout=self.index.layout,
+                           front_fold=self.front.fold_cost)
 
-        self.front.fold_cost(cost, counts, lay)
-        # front → refine handoff: 4 B coarse distance per candidate (§IV)
-        cost.record("handoff", Tier.CXL, n_cand, 4)
-        # level-0 codes stream from far memory for ALL candidates; deeper
-        # levels only for survivors of the previous level.
-        cost.record("refine", Tier.CXL, n_cand, lay.far_bytes)
-        for _ in range(1, cfg.trq_levels):
-            cost.record("refine", Tier.CXL, n_alive, lay.far_bytes)
-        # survivors (≤ budget per query) hit SSD
-        cost.record("rerank", Tier.SSD, counts["ssd_fetch"], lay.ssd_bytes)
-        cost.add_compute(_COMPUTE_S_PER_CAND * n_cand)
-        return cost
+
+def fold_counts(counts: dict[str, int], *, cost: QueryCost | None, config,
+                layout, front_fold) -> QueryCost:
+    """Fold collected stage counters into a Table-I traffic ledger.
+
+    Shared between the unsharded ``SearchExecutor`` and the per-shard fold
+    in ``anns.sharding`` (which builds one ledger per shard from the same
+    counter names, then combines them with ``QueryCost.merge_parallel``).
+    """
+    cost = cost or QueryCost()
+    n_cand = counts["front_cand"]
+    n_alive = counts["refine_alive"]
+
+    front_fold(cost, counts, layout)
+    # front → refine handoff: 4 B coarse distance per candidate (§IV)
+    cost.record("handoff", Tier.CXL, n_cand, 4)
+    # level-0 codes stream from far memory for ALL candidates; level
+    # ℓ ≥ 1 only for survivors of level ℓ−1.  The backends emit the
+    # actual per-level entering counts (``refine_alive_l{ℓ}``); the
+    # final-survivor count is only a fallback for legacy counter dicts
+    # that predate per-level counters (it UNDER-charges levels 1..L−1,
+    # since the mask chain is monotonically shrinking).
+    cost.record("refine", Tier.CXL, n_cand, layout.far_bytes)
+    for lv in range(1, config.trq_levels):
+        n_lv = counts.get(f"refine_alive_l{lv}", n_alive)
+        cost.record("refine", Tier.CXL, n_lv, layout.far_bytes)
+    # survivors (≤ budget per query) hit SSD
+    cost.record("rerank", Tier.SSD, counts["ssd_fetch"], layout.ssd_bytes)
+    cost.add_compute(_COMPUTE_S_PER_CAND * n_cand)
+    return cost
 
 
 # ------------------------------------------------------- executor registry

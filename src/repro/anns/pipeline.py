@@ -120,14 +120,28 @@ def build(key: jax.Array, x: jax.Array, config: PipelineConfig) -> FaTRQIndex:
 
 def search(index: FaTRQIndex, queries: jax.Array, *, k: int | None = None,
            cost: QueryCost | None = None, front: str | None = None,
-           backend: str | None = None) -> tuple[jax.Array, QueryCost]:
+           backend: str | None = None, shards: int | None = None,
+           mesh=None) -> tuple[jax.Array, QueryCost]:
     """Batched FaTRQ search; returns (Q, k) ids + the traffic ledger.
 
     ``front`` / ``backend`` override the config's stage selection for this
     call (e.g. ``backend="pallas"`` routes refinement through the fused
-    Pallas kernel).
+    Pallas kernel).  ``shards`` > 1 routes the call through the sharded
+    subsystem (``anns.sharding``): the database is partitioned by whole
+    IVF lists onto a 1-D ``("search",)`` mesh (needs that many devices)
+    and per-shard top-k + cost ledgers are merged — top-k ids are
+    identical to the unsharded path; requires the IVF front.
     """
     cfg = index.config
+    if shards is not None:
+        if (front or cfg.front) != "ivf":
+            raise ValueError("sharded search supports the IVF front only "
+                             "(whole inverted lists are the partition unit)")
+        from repro.anns.sharding import make_sharded_executor
+        sx = make_sharded_executor(index, shards=shards,
+                                   backend=backend or cfg.backend,
+                                   micro_batch=cfg.micro_batch, mesh=mesh)
+        return sx.search(queries, k=k, cost=cost)
     ex = make_executor(index, front=front or cfg.front,
                        backend=backend or cfg.backend,
                        micro_batch=cfg.micro_batch)

@@ -1,0 +1,432 @@
+"""Sharded search subsystem: mesh-partitioned database + shard_map datapath.
+
+Scale-out of the staged executor across devices (paper Fig. 6 scales
+throughput by replicating the refinement datapath across far-memory
+channels; COSMOS/HAVEN reach billion-scale by partitioning the candidate
+datapath).  Three pieces:
+
+* ``partition_database`` — IVF-list-aware partitioner: WHOLE inverted
+  lists are assigned to shards (a candidate's codes, scalars and full
+  vector co-reside with its list), balanced by list length with an LPT
+  greedy (heaviest list onto the lightest shard).  Per-shard arrays are
+  stacked on a leading shard axis and row ids are re-indexed shard-locally;
+  ``gid`` maps local rows back to global database ids.
+
+* ``ShardedIndex`` — the stacked database placed on a 1-D ``("search",)``
+  mesh: every per-record array sharded on its leading axis, the coarse
+  centroids / PQ codebook / calibration model replicated.
+
+* ``ShardedExecutor`` — runs the existing front → refine → rerank stages
+  per shard under ``repro.compat.shard_map`` (queries replicated, database
+  sharded).  Equivalence with the unsharded ``SearchExecutor`` is exact,
+  not approximate, because every data-dependent decision is globalized:
+
+    - front: each shard ranks the REPLICATED centroid table and selects
+      the global top-``nprobe`` lists, keeping only the ones it owns — the
+      union across shards is exactly the unsharded probe set;
+    - refine: pruning thresholds pool each shard's k smallest upper bounds
+      with an all-gather, so the global kth smallest (and hence every
+      survivor mask) matches the unsharded run bit-for-bit;
+    - rerank: the SSD budget is enforced globally the same way (budget-th
+      smallest estimate across shards), each shard fetches only its own
+      survivors, and a final ``lax.top_k`` over all-gathered
+      (distance, global id) pairs merges shard-local top-k (exact up to
+      exact-f32-estimate ties at the budget boundary — see
+      ``_rerank_survivors_sharded``).
+
+  Stage counters stay device-side per shard; one host transfer at the end
+  builds one ``QueryCost`` ledger PER SHARD, folded with
+  ``QueryCost.merge_parallel`` (shards run concurrently: per-tier time is
+  the max across shard ledgers, bytes/accesses sum).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.anns.executor import (REFINE_BACKENDS, _accumulate, fold_counts,
+                                 iter_chunks, search_budget)
+from repro.anns.stages import (Candidates, Counters, PallasRefineBackend,
+                               ReferenceRefineBackend, adc_score,
+                               fold_ivf_front_cost, rank_centroid_lists)
+from repro.compat import shard_map
+from repro.core.decomposition import RecordScalars
+from repro.core.estimator import pooled_k_smallest
+from repro.core.trq import TRQCodes, TRQLevel
+from repro.memory import QueryCost, RecordLayout
+from repro.quant import pq as pq_mod
+
+AXIS = "search"
+
+
+# ------------------------------------------------------------- partitioner
+
+
+def _stack_rows(arr, rows_per_shard: list[np.ndarray], n_max: int):
+    """Gather per-shard row subsets of a global (N, ...) array and stack
+    them on a leading shard axis, zero-padding ragged shards to n_max."""
+    a = np.asarray(arr)
+    out = np.zeros((len(rows_per_shard), n_max) + a.shape[1:], a.dtype)
+    for s, rows in enumerate(rows_per_shard):
+        out[s, :rows.size] = a[rows]
+    return jnp.asarray(out)
+
+
+@dataclass(eq=False)
+class ShardedIndex:
+    """A FaTRQIndex partitioned into S shards, stacked on a leading axis.
+
+    Replicated: ``centroids`` (coarse table), ``codebook`` (PQ), and the
+    calibration model inside ``trq``.  Sharded (leading axis S):
+    ``list_gid``/``lists`` (inverted lists with LOCAL row ids), per-record
+    ``pq_codes``/``trq``/``x``, and ``gid`` (local row → global id).
+    """
+
+    config: "PipelineConfig"         # noqa: F821 - import cycle via pipeline
+    layout: RecordLayout
+    n_shards: int
+    centroids: jax.Array             # (nlist, D) replicated
+    codebook: pq_mod.PQCodebook      # replicated
+    list_gid: jax.Array              # (S, Lmax) global list id, -1 pad
+    lists: jax.Array                 # (S, Lmax, cap) LOCAL row ids, -1 pad
+    pq_codes: jax.Array              # (S, n_max, M) uint8
+    trq: TRQCodes                    # every per-record leaf (S, n_max, ...)
+    x: jax.Array                     # (S, n_max, D) full precision ("SSD")
+    gid: jax.Array                   # (S, n_max) global row id, -1 pad
+    shard_rows: np.ndarray           # (S,) host-side real row counts
+    mesh: jax.sharding.Mesh | None = None
+
+    def place(self, mesh) -> "ShardedIndex":
+        """Place the index on a 1-D ``("search",)`` mesh: per-record arrays
+        sharded on the leading shard axis, globals replicated."""
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        if sizes.get(AXIS) != self.n_shards:
+            raise ValueError(f"mesh axis {AXIS!r} has size {sizes.get(AXIS)} "
+                             f"but the index has {self.n_shards} shards")
+        shard = NamedSharding(mesh, P(AXIS))
+        rep = NamedSharding(mesh, P())
+        put_s = lambda a: jax.device_put(a, shard)            # noqa: E731
+        put_r = lambda a: jax.device_put(a, rep)              # noqa: E731
+        trq = TRQCodes(
+            dim=self.trq.dim,
+            levels=jax.tree.map(put_s, self.trq.levels),
+            scalars=jax.tree.map(put_s, self.trq.scalars),
+            model=jax.tree.map(put_r, self.trq.model))
+        return dataclasses.replace(
+            self, mesh=mesh,
+            centroids=put_r(self.centroids),
+            codebook=jax.tree.map(put_r, self.codebook),
+            list_gid=put_s(self.list_gid), lists=put_s(self.lists),
+            pq_codes=put_s(self.pq_codes), trq=trq,
+            x=put_s(self.x), gid=put_s(self.gid))
+
+
+def partition_database(index, n_shards: int) -> ShardedIndex:
+    """IVF-list-aware partitioner: whole inverted lists → shards.
+
+    Lists are assigned with an LPT greedy — sort by member count
+    descending, place each on the currently lightest shard — which bounds
+    the heaviest shard at (4/3 − 1/3S)× the optimum.  All per-record
+    arrays (PQ codes, TRQ levels + scalars, full vectors) are gathered into
+    shard-local row order so the per-shard datapath indexes them densely.
+    """
+    ivf = index.ivf
+    lens = np.asarray(ivf.list_len)
+    lists_np = np.asarray(ivf.lists)
+    nlist, cap = lists_np.shape
+    if not 1 <= n_shards <= nlist:
+        raise ValueError(f"n_shards={n_shards} must be in [1, nlist={nlist}]"
+                         f" — whole lists are the partitioning unit")
+
+    order = np.argsort(-lens, kind="stable")
+    loads = np.zeros(n_shards, np.int64)
+    members: list[list[int]] = [[] for _ in range(n_shards)]
+    for li in order:
+        s = int(np.argmin(loads))
+        members[s].append(int(li))
+        loads[s] += int(lens[li])
+
+    lmax = max(len(m) for m in members)
+    rows_per: list[np.ndarray] = []
+    list_gid = np.full((n_shards, lmax), -1, np.int32)
+    local_lists = np.full((n_shards, lmax, cap), -1, np.int32)
+    for s, m in enumerate(members):
+        off = 0
+        rows: list[np.ndarray] = []
+        for j, li in enumerate(m):
+            n_li = int(lens[li])
+            list_gid[s, j] = li
+            local_lists[s, j, :n_li] = np.arange(off, off + n_li)
+            rows.append(lists_np[li, :n_li])
+            off += n_li
+        rows_per.append(np.concatenate(rows) if rows
+                        else np.zeros((0,), np.int32))
+    shard_rows = np.array([r.size for r in rows_per])
+    n_max = max(int(shard_rows.max()), 1)
+
+    gid = np.full((n_shards, n_max), -1, np.int32)
+    for s, rows in enumerate(rows_per):
+        gid[s, :rows.size] = rows
+
+    trq = index.trq
+    levels = tuple(
+        TRQLevel(packed=_stack_rows(lv.packed, rows_per, n_max),
+                 proj=_stack_rows(lv.proj, rows_per, n_max),
+                 norm=_stack_rows(lv.norm, rows_per, n_max),
+                 rho=_stack_rows(lv.rho, rows_per, n_max))
+        for lv in trq.levels)
+    scalars = RecordScalars(
+        delta_sq=_stack_rows(trq.scalars.delta_sq, rows_per, n_max),
+        cross=_stack_rows(trq.scalars.cross, rows_per, n_max),
+        rho=_stack_rows(trq.scalars.rho, rows_per, n_max),
+        norm=_stack_rows(trq.scalars.norm, rows_per, n_max))
+
+    return ShardedIndex(
+        config=index.config, layout=index.layout, n_shards=n_shards,
+        centroids=ivf.centroids, codebook=index.codebook,
+        list_gid=jnp.asarray(list_gid), lists=jnp.asarray(local_lists),
+        pq_codes=_stack_rows(index.pq_codes, rows_per, n_max),
+        trq=TRQCodes(dim=trq.dim, levels=levels, scalars=scalars,
+                     model=trq.model),
+        x=_stack_rows(index.x, rows_per, n_max),
+        gid=jnp.asarray(gid), shard_rows=shard_rows)
+
+
+# ------------------------------------------------------ per-shard datapath
+
+
+def _rerank_survivors_sharded(x, gid, queries, ids, est, alive, *, k: int,
+                              budget: int, axis_name: str):
+    """Shard-local exact rerank under a GLOBAL SSD budget.
+
+    The fetch set must match the unsharded executor's exactly: take each
+    shard's ``min(budget, C_s)`` best estimates, pool them with an
+    all-gather to find the global budget-th smallest estimate among alive
+    candidates, and fetch only local survivors at or below it.  Returns
+    (exact distances, global ids, local fetch count) — distances are +inf
+    outside the fetch set so the cross-shard top-k merge ignores them.
+
+    Tie caveat: the unsharded path cuts EXACTLY ``budget`` slots with
+    ``top_k`` (index-order tie-break), while this threshold cut keeps every
+    candidate at ``tau_b``; records with exactly equal f32 estimates
+    straddling the budget boundary (e.g. duplicate database rows) can
+    therefore fetch one extra candidate per tie.  Real-valued data makes
+    such exact ties measure-zero, and the two paths' candidate orderings
+    differ anyway, so index-order tie-breaking is not reproducible across
+    them in either direction.
+    """
+    bl = min(budget, est.shape[1])
+    est_m = jnp.where(alive, est, jnp.inf)
+    neg_local, order = jax.lax.top_k(-est_m, bl)              # (Q, bl)
+    tau_b = pooled_k_smallest(est_m, budget, axis_name)       # (Q,)
+
+    fetch_ids = jnp.take_along_axis(ids, order, axis=1)
+    fetch_alive = jnp.take_along_axis(alive, order, axis=1) & \
+        (-neg_local <= tau_b[:, None])
+    d = jnp.sum((x[fetch_ids] - queries[:, None, :]) ** 2, axis=-1)
+    d = jnp.where(fetch_alive, d, jnp.inf)
+    fetch_gid = gid[fetch_ids]                                # (Q, bl)
+    return d, fetch_gid, jnp.sum(fetch_alive)
+
+
+def _shard_body(queries, centroids, codebook, model, db, *, dim: int,
+                nprobe: int, k: int, budget: int, bound: str, z: float,
+                backend: str):
+    """One shard's front → refine → rerank, with globalized decisions.
+
+    Runs under shard_map: ``queries``/``centroids``/``codebook``/``model``
+    are replicated, ``db`` leaves carry a leading length-1 shard-block dim.
+    """
+    list_gid, lists, pq_codes, levels, scalars, x, gid = jax.tree.map(
+        lambda a: a[0], db)
+    trq = TRQCodes(dim=dim, levels=levels, scalars=scalars, model=model)
+    nq = queries.shape[0]
+    lmax, cap = lists.shape
+
+    # -- front: rank the replicated centroid table, keep owned lists ------
+    d_cent, top_lists = rank_centroid_lists(centroids, queries,
+                                            nprobe=nprobe)
+    chosen = jnp.any(list_gid[None, :, None] == top_lists[:, None, :],
+                     axis=-1)                                 # (Q, Lmax)
+    # Gather only the chosen owned lists — the global top-nprobe set has
+    # nprobe lists TOTAL across shards, so ≤ nprobe local slots always
+    # suffice; scoring the whole shard would cost Lmax/nprobe× more.
+    pl = min(nprobe, lmax)
+    d_own = jnp.where(chosen & (list_gid >= 0)[None, :],
+                      d_cent[:, jnp.maximum(list_gid, 0)], jnp.inf)
+    _, slot = jax.lax.top_k(-d_own, pl)                       # (Q, pl)
+    sel = jnp.take_along_axis(chosen, slot, axis=1)           # (Q, pl)
+    ids_l = lists[slot]                                       # (Q, pl, cap)
+    valid = ((ids_l >= 0) & sel[:, :, None]).reshape(nq, pl * cap)
+    ids = jnp.maximum(ids_l.reshape(nq, pl * cap), 0)
+    d0 = adc_score(codebook, pq_codes[ids], queries, valid)
+    cand = Candidates(ids=ids, valid=valid, d0=d0,
+                      counters={"front_cand": jnp.sum(valid)})
+
+    # -- refine: existing backends, thresholds pooled across the axis -----
+    if backend == "reference":
+        be = ReferenceRefineBackend()
+    elif backend == "pallas":
+        be = PallasRefineBackend()
+    else:
+        raise ValueError(f"unknown refine backend {backend!r}; "
+                         f"expected one of {REFINE_BACKENDS}")
+    refined = be.refine(queries, cand, trq, k=k, bound=bound, z=z,
+                        axis_name=AXIS)
+
+    # -- rerank + cross-shard top-k merge ---------------------------------
+    d, fetch_gid, n_ssd = _rerank_survivors_sharded(
+        x, gid, queries, cand.ids, refined.est, refined.alive,
+        k=k, budget=budget, axis_name=AXIS)
+    d_all = jax.lax.all_gather(d, AXIS, axis=1, tiled=True)
+    g_all = jax.lax.all_gather(fetch_gid, AXIS, axis=1, tiled=True)
+    _, best = jax.lax.top_k(-d_all, k)
+    topk = jnp.take_along_axis(g_all, best, axis=1)           # replicated
+
+    counters = dict(cand.counters)
+    counters.update(refined.counters)
+    counters["ssd_fetch"] = n_ssd
+    counters = {n: v.reshape(1).astype(jnp.int32)
+                for n, v in counters.items()}                 # (1,) → (S,)
+    return topk, counters
+
+
+@partial(jax.jit, static_argnames=("mesh", "dim", "nprobe", "k", "budget",
+                                   "bound", "z", "backend"))
+def _sharded_search(mesh, queries, centroids, codebook, trq_model, db, *,
+                    dim: int, nprobe: int, k: int, budget: int, bound: str,
+                    z: float, backend: str):
+    body = partial(_shard_body, dim=dim, nprobe=nprobe, k=k, budget=budget,
+                   bound=bound, z=z, backend=backend)
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(), P(), P(), P(), P(AXIS)),
+                   out_specs=(P(), P(AXIS)),
+                   check_rep=False)
+    return fn(queries, centroids, codebook, trq_model, db)
+
+
+# ---------------------------------------------------------------- executor
+
+
+@dataclass
+class ShardedExecutor:
+    """Mesh-parallel staged search over a ShardedIndex.
+
+    Bit-identical top-k to the unsharded ``SearchExecutor`` on the same
+    database (see module docstring for why), with per-shard QueryCost
+    ledgers folded under the parallel-shard overlap model.
+    """
+
+    sharded: ShardedIndex
+    backend: str = "reference"
+    micro_batch: int | None = None
+
+    def __post_init__(self):
+        if self.backend not in REFINE_BACKENDS:
+            raise ValueError(f"unknown refine backend {self.backend!r}; "
+                             f"expected one of {REFINE_BACKENDS}")
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def from_index(cls, index, *, shards: int, backend: str = "reference",
+                   mesh=None, micro_batch: int | None = None
+                   ) -> "ShardedExecutor":
+        """Partition ``index`` into ``shards`` and place it on ``mesh``
+        (default: a fresh ``("search",)`` mesh over the first S devices)."""
+        if mesh is None:
+            from repro.launch.mesh import make_search_mesh
+            mesh = make_search_mesh(shards)
+        si = partition_database(index, shards).place(mesh)
+        return cls(sharded=si, backend=backend, micro_batch=micro_batch)
+
+    # -- search -----------------------------------------------------------
+
+    def search(self, queries: jax.Array, *, k: int | None = None,
+               cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
+        """Sharded FaTRQ search: (Q, k) GLOBAL ids + the merged ledger."""
+        si = self.sharded
+        cfg = si.config
+        k = k or cfg.final_k
+        budget = search_budget(cfg, k)
+        db = (si.list_gid, si.lists, si.pq_codes, si.trq.levels,
+              si.trq.scalars, si.x, si.gid)
+
+        topk_parts: list[jax.Array] = []
+        counters: Counters = {}
+        for chunk in iter_chunks(queries, self.micro_batch):
+            topk, cnt = _sharded_search(
+                si.mesh, chunk, si.centroids, si.codebook, si.trq.model, db,
+                dim=si.trq.dim, nprobe=cfg.nprobe, k=k, budget=budget,
+                bound=cfg.bound, z=cfg.z, backend=self.backend)
+            topk_parts.append(topk)
+            _accumulate(counters, cnt)
+
+        merged = self._fold(counters)
+        if cost is not None:
+            merged = cost.merge(merged)
+        out = topk_parts[0] if len(topk_parts) == 1 else jnp.concatenate(
+            topk_parts, axis=0)
+        return out, merged
+
+    # -- cost folding -----------------------------------------------------
+
+    def _fold(self, counters: Counters) -> QueryCost:
+        """One host transfer: (S,)-stacked shard counters → S Table-I
+        ledgers → one parallel-folded QueryCost (max time, summed bytes)."""
+        si = self.sharded
+        names = list(counters)
+        vals = jax.device_get([counters[n] for n in names])
+
+        shard_costs = []
+        for s in range(si.n_shards):
+            counts = {n: int(v[s]) for n, v in zip(names, vals)}
+            shard_costs.append(fold_counts(
+                counts, cost=None, config=si.config, layout=si.layout,
+                front_fold=fold_ivf_front_cost))
+        merged = shard_costs[0]
+        for c in shard_costs[1:]:
+            merged.merge_parallel(c)
+        return merged
+
+
+def make_sharded_executor(index, *, shards: int, backend: str = "reference",
+                          micro_batch: int | None = None, mesh=None
+                          ) -> ShardedExecutor:
+    """Memoized sharded-executor factory (facade entry point).
+
+    Partitioning + placement run once per (index, shards); executors are
+    additionally cached per (backend, micro_batch) so ``anns.pipeline`` and
+    ``serving`` can call this on every request.
+    """
+    key = (shards, backend, micro_batch, mesh)
+    cache = getattr(index, "_sharded_cache", None)
+    if cache is None:
+        cache = {}
+        index._sharded_cache = cache
+    ex = cache.get(key)
+    if ex is None:
+        si = None
+        # share the partitioned+placed index only across entries with the
+        # SAME mesh request — a default (mesh=None) call must not silently
+        # adopt a custom-mesh placement and vice versa
+        for (sh, _b, _m, _mesh), other in cache.items():
+            if sh == shards and _mesh is mesh:
+                si = other.sharded
+                break
+        if si is None:
+            ex = ShardedExecutor.from_index(index, shards=shards,
+                                            backend=backend, mesh=mesh,
+                                            micro_batch=micro_batch)
+        else:
+            ex = ShardedExecutor(sharded=si, backend=backend,
+                                 micro_batch=micro_batch)
+        cache[key] = ex
+    return ex

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import trq as trq_mod
+from repro.core.estimator import pooled_k_smallest
 from repro.core.packing import unpack_ternary
 from repro.core.ternary import ternary_inner
 from repro.core.trq import TRQCodes
@@ -74,28 +75,67 @@ class FrontStage(Protocol):
 
 @runtime_checkable
 class RefineBackend(Protocol):
-    """FaTRQ refinement over a candidate batch."""
+    """FaTRQ refinement over a candidate batch.
+
+    ``axis_name`` selects sharded operation: inside ``shard_map`` the
+    pruning thresholds are computed globally across the named mesh axis so
+    per-shard survivor masks match an unsharded run exactly (see
+    ``anns.sharding``).
+    """
 
     name: str
 
     def refine(self, queries: jax.Array, cand: Candidates, trq: TRQCodes,
-               *, k: int, bound: str, z: float) -> Refined: ...
+               *, k: int, bound: str, z: float,
+               axis_name: str | None = None) -> Refined: ...
 
 
 # ------------------------------------------------------------- front stages
 
 
+def fold_ivf_front_cost(cost: QueryCost, counts: dict[str, int],
+                        layout: RecordLayout) -> None:
+    """IVF front traffic model: PQ codes + LUT live in fast memory (HBM).
+
+    Shared by ``IVFFrontStage.fold_cost`` and the per-shard fold in
+    ``anns.sharding`` (the sharded front is IVF-only), so the two ledgers
+    cannot drift apart.
+    """
+    cost.record("coarse", Tier.HBM, counts["front_cand"], layout.fast_bytes)
+
+
+def rank_centroid_lists(centroids: jax.Array, queries: jax.Array, *,
+                        nprobe: int) -> tuple[jax.Array, jax.Array]:
+    """Squared-L2 centroid ranking → (distances (Q, nlist), global
+    top-nprobe list ids (Q, nprobe)).
+
+    Shared by the unsharded IVF front and the sharded front
+    (``anns.sharding``) — the sharded path's bit-identical guarantee
+    depends on both selecting the same probe set.
+    """
+    d = jnp.sum((queries[:, None, :] - centroids[None]) ** 2, axis=-1)
+    _, top_lists = jax.lax.top_k(-d, nprobe)
+    return d, top_lists
+
+
+def adc_score(codebook: pq_mod.PQCodebook, codes: jax.Array,
+              queries: jax.Array, valid: jax.Array) -> jax.Array:
+    """Batched PQ-ADC scoring of per-query gathered codes (Q, C, M),
+    +inf outside ``valid``.  Shared with the sharded front likewise."""
+    tables = jax.vmap(lambda q: pq_mod.adc_table(codebook, q))(queries)
+    d0 = jax.vmap(pq_mod.adc_distances)(tables, codes)
+    return jnp.where(valid, d0, jnp.inf)
+
+
 @partial(jax.jit, static_argnames=("nprobe",))
 def _ivf_candidates(ivf: ivf_mod.IVFIndex, codebook, pq_codes, queries, *,
                     nprobe: int):
-    d = jnp.sum((queries[:, None, :] - ivf.centroids[None]) ** 2, axis=-1)
-    _, top_lists = jax.lax.top_k(-d, nprobe)                  # (Q, nprobe)
+    _, top_lists = rank_centroid_lists(ivf.centroids, queries,
+                                       nprobe=nprobe)
     ids = ivf.lists[top_lists].reshape(queries.shape[0], -1)  # (Q, nprobe·cap)
     valid = ids >= 0
     safe = jnp.maximum(ids, 0)
-    tables = jax.vmap(lambda q: pq_mod.adc_table(codebook, q))(queries)
-    d0 = jax.vmap(pq_mod.adc_distances)(tables, pq_codes[safe])
-    d0 = jnp.where(valid, d0, jnp.inf)
+    d0 = adc_score(codebook, pq_codes[safe], queries, valid)
     return safe, valid, d0, jnp.sum(valid)
 
 
@@ -118,9 +158,7 @@ class IVFFrontStage:
 
     def fold_cost(self, cost: QueryCost, counts: dict[str, int],
                   layout: RecordLayout) -> None:
-        # PQ codes + LUT live in fast memory (HBM tier).
-        cost.record("coarse", Tier.HBM, counts["front_cand"],
-                    layout.fast_bytes)
+        fold_ivf_front_cost(cost, counts, layout)
 
 
 @partial(jax.jit, static_argnames=("iters", "beam", "expand"))
@@ -182,16 +220,32 @@ class GraphFrontStage:
 # ---------------------------------------------------------- refine backends
 
 
-@partial(jax.jit, static_argnames=("k", "bound", "z"))
-def _reference_refine(queries, d0, ids, valid, trq: TRQCodes, *, k: int,
-                      bound: str, z: float):
-    def one(q, d0_q, ids_q):
-        state = trq_mod.progressive_search(q, d0_q, trq, ids_q, k=k,
-                                           bound=bound, z=z)
-        return state.est, state.alive
+def _level_counters(level_alive: tuple[jax.Array, ...]) -> Counters:
+    """Per-level survivor counters from the alive-mask chain.
 
-    est, alive = jax.vmap(one)(queries, d0, ids)
-    return est, alive & valid
+    ``refine_alive`` is the FINAL survivor count (kept for the single-level
+    ledger and back-compat); ``refine_alive_l{ℓ}`` counts the candidates
+    ENTERING level ℓ ≥ 1 — i.e. survivors of level ℓ−1 — which is exactly
+    the population whose level-ℓ codes stream from far memory.
+    """
+    counters: Counters = {"refine_alive": jnp.sum(level_alive[-1])}
+    for lv in range(1, len(level_alive)):
+        counters[f"refine_alive_l{lv}"] = jnp.sum(level_alive[lv - 1])
+    return counters
+
+
+@partial(jax.jit, static_argnames=("k", "bound", "z", "axis_name"))
+def _reference_refine(queries, d0, ids, valid, trq: TRQCodes, *, k: int,
+                      bound: str, z: float, axis_name: str | None = None):
+    def one(q, d0_q, ids_q):
+        state, level_alive = trq_mod.progressive_search(
+            q, d0_q, trq, ids_q, k=k, bound=bound, z=z, axis_name=axis_name,
+            collect_level_alive=True)
+        return state.est, level_alive
+
+    est, level_alive = jax.vmap(one)(queries, d0, ids)
+    level_alive = tuple(a & valid for a in level_alive)
+    return est, level_alive
 
 
 @dataclass
@@ -201,24 +255,31 @@ class ReferenceRefineBackend:
     name: str = field(default="reference", init=False)
 
     def refine(self, queries: jax.Array, cand: Candidates, trq: TRQCodes,
-               *, k: int, bound: str, z: float) -> Refined:
-        est, alive = _reference_refine(queries, cand.d0, cand.ids, cand.valid,
-                                       trq, k=k, bound=bound, z=z)
-        return Refined(est=est, alive=alive,
-                       counters={"refine_alive": jnp.sum(alive)})
+               *, k: int, bound: str, z: float,
+               axis_name: str | None = None) -> Refined:
+        est, level_alive = _reference_refine(
+            queries, cand.d0, cand.ids, cand.valid, trq, k=k, bound=bound,
+            z=z, axis_name=axis_name)
+        return Refined(est=est, alive=level_alive[-1],
+                       counters=_level_counters(level_alive))
 
 
-def _topk_threshold_batch(hi: jax.Array, alive: jax.Array, k: int
-                          ) -> jax.Array:
-    """Batched kth-smallest upper estimate among alive candidates (Q,)."""
+def _topk_threshold_batch(hi: jax.Array, alive: jax.Array, k: int,
+                          axis_name: str | None = None) -> jax.Array:
+    """Batched kth-smallest upper estimate among alive candidates (Q,).
+
+    With ``axis_name`` (inside shard_map) the threshold is global — the
+    shared ``estimator.pooled_k_smallest`` pooling, batched over queries.
+    """
     masked = jnp.where(alive, hi, jnp.inf)
-    neg_top, _ = jax.lax.top_k(-masked, k)
-    return -neg_top[:, -1]
+    return pooled_k_smallest(masked, k, axis_name)
 
 
-@partial(jax.jit, static_argnames=("k", "bound", "z", "block_c"))
+@partial(jax.jit, static_argnames=("k", "bound", "z", "block_c",
+                                   "axis_name"))
 def _pallas_refine(queries, d0, ids, valid, trq: TRQCodes, *, k: int,
-                   bound: str, z: float, block_c: int):
+                   bound: str, z: float, block_c: int,
+                   axis_name: str | None = None):
     sc = trq.scalars
     packed = trq.levels[0].packed[ids]                        # (Q, C, G)
     out = kernel_ops.refine_scores_batch(
@@ -232,8 +293,9 @@ def _pallas_refine(queries, d0, ids, valid, trq: TRQCodes, *, k: int,
         lo, hi = est - m, est + m
     else:
         raise ValueError(f"unknown bound {bound!r}")
-    tau = _topk_threshold_batch(hi, valid, k)
+    tau = _topk_threshold_batch(hi, valid, k, axis_name)
     alive = valid & (lo <= tau[:, None])
+    level_alive = [alive]
 
     # Deeper TRQ levels: identical stacking math to trq.progressive_search,
     # batched over queries (the kernel covers the hot level-0 stream).
@@ -247,9 +309,10 @@ def _pallas_refine(queries, d0, ids, valid, trq: TRQCodes, *, k: int,
             rem = level.norm[ids] * jnp.sqrt(
                 jnp.clip(1.0 - level.rho[ids] ** 2, 0.0, 1.0))
             marg = 2.0 * qn * rem + trq.model.resid_std
-            tau = _topk_threshold_batch(est + marg, alive, k)
+            tau = _topk_threshold_batch(est + marg, alive, k, axis_name)
             alive = alive & (est - marg <= tau[:, None])
-    return est, alive
+            level_alive.append(alive)
+    return est, tuple(level_alive)
 
 
 @dataclass
@@ -265,12 +328,13 @@ class PallasRefineBackend:
     name: str = field(default="pallas", init=False)
 
     def refine(self, queries: jax.Array, cand: Candidates, trq: TRQCodes,
-               *, k: int, bound: str, z: float) -> Refined:
-        est, alive = _pallas_refine(queries, cand.d0, cand.ids, cand.valid,
-                                    trq, k=k, bound=bound, z=z,
-                                    block_c=self.block_c)
-        return Refined(est=est, alive=alive,
-                       counters={"refine_alive": jnp.sum(alive)})
+               *, k: int, bound: str, z: float,
+               axis_name: str | None = None) -> Refined:
+        est, level_alive = _pallas_refine(
+            queries, cand.d0, cand.ids, cand.valid, trq, k=k, bound=bound,
+            z=z, block_c=self.block_c, axis_name=axis_name)
+        return Refined(est=est, alive=level_alive[-1],
+                       counters=_level_counters(level_alive))
 
 
 # ----------------------------------------------------------------- rerank

@@ -5,15 +5,34 @@ where the API lives at ``jax.experimental.shard_map.shard_map``.  Import it
 from here so call sites work on both:
 
     from repro.compat import shard_map
+
+The wrapper also normalizes the replication-check flag: callers pass
+``check_rep=`` (the 0.4.x name), which newer jax renamed ``check_vma=``
+and may drop entirely — the shim translates or drops it to match whatever
+the underlying implementation accepts.
 """
 
 from __future__ import annotations
 
+import inspect
+
 import jax
 
 try:
-    shard_map = jax.shard_map
+    _shard_map_impl = jax.shard_map
 except AttributeError:
-    from jax.experimental.shard_map import shard_map
+    from jax.experimental.shard_map import shard_map as _shard_map_impl
+
+_SHARD_MAP_PARAMS = frozenset(
+    inspect.signature(_shard_map_impl).parameters)
+
+
+def shard_map(f, *args, **kwargs):
+    if "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_PARAMS:
+        flag = kwargs.pop("check_rep")
+        if "check_vma" in _SHARD_MAP_PARAMS:
+            kwargs["check_vma"] = flag
+    return _shard_map_impl(f, *args, **kwargs)
+
 
 __all__ = ["shard_map"]

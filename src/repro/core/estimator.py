@@ -73,21 +73,50 @@ def cauchy_margin(q: jax.Array, codes: jax.Array, norms: jax.Array,
     return 2.0 * qn * norms * orth_q * orth_d
 
 
-def topk_threshold(estimates: jax.Array, alive: jax.Array, k: int) -> jax.Array:
-    """kth-smallest upper estimate among alive candidates (τ for pruning)."""
+def pooled_k_smallest(values: jax.Array, k: int,
+                      axis_name: str | None = None) -> jax.Array:
+    """kth smallest of ``values`` along the last axis, pooled globally.
+
+    With ``axis_name`` (inside ``shard_map``) each shard contributes its
+    ``min(k, local)`` smallest values, an all-gather pools them along the
+    last axis, and the kth smallest of the pool is the EXACT global kth
+    smallest (any global top-k member is in its shard's local top-k).
+    The single implementation behind every sharded threshold — top-k
+    pruning and the SSD rerank budget — so the cuts cannot drift apart.
+    Leading axes are batched; +inf entries encode masked-out values.
+    """
+    kk = min(k, values.shape[-1])
+    neg_top, _ = jax.lax.top_k(-values, kk)
+    if axis_name is not None:
+        pool = jax.lax.all_gather(neg_top, axis_name,
+                                  axis=values.ndim - 1, tiled=True)
+        neg_top, _ = jax.lax.top_k(pool, min(k, pool.shape[-1]))
+    return -neg_top[..., -1]
+
+
+def topk_threshold(estimates: jax.Array, alive: jax.Array, k: int,
+                   axis_name: str | None = None) -> jax.Array:
+    """kth-smallest upper estimate among alive candidates (τ for pruning).
+
+    With ``axis_name`` (inside ``shard_map``) the threshold is global —
+    see ``pooled_k_smallest`` — so sharded pruning keeps the same survivor
+    set as an unsharded run.
+    """
     masked = jnp.where(alive, estimates, jnp.inf)
-    neg_top, _ = jax.lax.top_k(-masked, k)
-    return -neg_top[-1]
+    return pooled_k_smallest(masked, k, axis_name)
 
 
 def refine_level(q: jax.Array, d0: jax.Array, scalars: RecordScalars,
                  codes: jax.Array, model: calib.CalibrationModel,
                  *, k: int, bound: str = "cauchy", z: float = 3.0,
-                 prev_alive: jax.Array | None = None) -> ProgressiveState:
+                 prev_alive: jax.Array | None = None,
+                 axis_name: str | None = None) -> ProgressiveState:
     """One FaTRQ refinement level over a candidate batch (single query).
 
     Returns estimates, certified lower bounds, the survivor mask after
     pruning against the updated top-k threshold, and the threshold itself.
+    ``axis_name`` makes the threshold global across a shard_map axis (see
+    ``topk_threshold``).
     """
     c = d0.shape[0]
     if prev_alive is None:
@@ -114,7 +143,7 @@ def refine_level(q: jax.Array, d0: jax.Array, scalars: RecordScalars,
     else:
         raise ValueError(f"unknown bound {bound!r}")
 
-    tau = topk_threshold(hi, prev_alive, k)
+    tau = topk_threshold(hi, prev_alive, k, axis_name)
     alive = prev_alive & (lo <= tau)
     return ProgressiveState(est=est, lo=lo, alive=alive, tau=tau)
 

@@ -153,11 +153,20 @@ def calibrate(codes: TRQCodes, q_samples: jax.Array, x: jax.Array,
 
 def progressive_search(q: jax.Array, d0: jax.Array, codes: TRQCodes,
                        cand_idx: jax.Array, *, k: int,
-                       bound: str = "cauchy", z: float = 3.0
-                       ) -> ProgressiveState:
+                       bound: str = "cauchy", z: float = 3.0,
+                       axis_name: str | None = None,
+                       collect_level_alive: bool = False):
     """Run all TRQ levels over a candidate list for one query, pruning
     between levels.  Returns the final ProgressiveState (estimates + alive
-    mask); the pipeline layer turns `alive` into SSD fetches."""
+    mask); the pipeline layer turns `alive` into SSD fetches.
+
+    ``axis_name``: inside ``shard_map``, compute every pruning threshold
+    globally across the named mesh axis (see ``estimator.topk_threshold``)
+    so per-shard survivor masks match an unsharded run exactly.
+    ``collect_level_alive``: also return the tuple of alive masks after each
+    level — level ℓ+1's far-memory traffic is charged to survivors of level
+    ℓ, so the executor needs the whole chain, not just the final mask.
+    """
     sc = codes.scalars
     scalars = RecordScalars(delta_sq=sc.delta_sq[cand_idx],
                             cross=sc.cross[cand_idx],
@@ -168,7 +177,9 @@ def progressive_search(q: jax.Array, d0: jax.Array, codes: TRQCodes,
     # Level 0 (paper's second-order estimate), then deeper levels tighten.
     trits = unpack_level(codes, 0, cand_idx)
     state = refine_level(q, d0, scalars, trits, codes.model, k=k,
-                         bound=bound, z=z, prev_alive=alive)
+                         bound=bound, z=z, prev_alive=alive,
+                         axis_name=axis_name)
+    level_alive = [state.alive]
     if codes.num_levels > 1:
         # Deeper levels: each adds −2·⟨q, δ̂_ℓ⟩ with δ̂_ℓ = proj_ℓ·e_code_ℓ,
         # and the certified margin shrinks to the norm of what remains.
@@ -185,8 +196,11 @@ def progressive_search(q: jax.Array, d0: jax.Array, codes: TRQCodes,
                 jnp.clip(1.0 - level.rho[cand_idx] ** 2, 0.0, 1.0))
             margin = 2.0 * qn * rem + codes.model.resid_std
             hi = est + margin
-            tau = topk_threshold(hi, state.alive, k)
+            tau = topk_threshold(hi, state.alive, k, axis_name)
             alive = state.alive & (est - margin <= tau)
             state = ProgressiveState(est=est, lo=est - margin,
                                      alive=alive, tau=tau)
+            level_alive.append(alive)
+    if collect_level_alive:
+        return state, tuple(level_alive)
     return state

@@ -26,6 +26,24 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_search_mesh(n: int | None = None):
+    """1-D ``("search",)`` mesh for the sharded ANNS datapath.
+
+    ``n`` shards over the first n devices (default: all available).  On a
+    CPU container, fake devices come from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before the
+    first jax call).
+    """
+    avail = len(jax.devices())
+    n = avail if n is None else n
+    if n > avail:
+        raise ValueError(
+            f"make_search_mesh({n}) needs {n} devices but only {avail} are "
+            f"visible; set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before the first jax call (host-platform meshes)")
+    return jax.make_mesh((n,), ("search",))
+
+
 def mesh_axis_sizes(mesh) -> dict[str, int]:
     return dict(zip(mesh.axis_names, mesh.devices.shape))
 

@@ -64,17 +64,39 @@ class Traffic:
 
 @dataclass
 class QueryCost:
-    """Traffic ledger for a (batch of) queries against the tier model."""
+    """Traffic ledger for a (batch of) queries against the tier model.
+
+    ``parallel_s`` is set by ``merge_parallel`` when concurrent shard lanes
+    have been folded in: per-tier times become explicit (the slowest lane)
+    instead of being derived from the pooled traffic, which would read as
+    if the lanes had run back-to-back.
+    """
 
     model: dict[Tier, TierSpec] = field(default_factory=lambda: dict(TABLE_I))
     ledger: dict[str, Traffic] = field(default_factory=dict)
     compute_s: float = 0.0
+    parallel_s: dict[str, float] = field(default_factory=dict)
 
     def record(self, stage: str, tier: Tier, accesses: int, bytes_each: int
                ) -> None:
         key = f"{stage}:{tier.value}"
         t = self.ledger.setdefault(key, Traffic())
-        t.add(accesses, bytes_each, self.model[tier].min_grain_B)
+        if self.parallel_s:
+            # frozen ledger (post merge_parallel): keep time consistent by
+            # adding this record's incremental key time to the tier's
+            # frozen value — per-tier time is additive over keys.
+            before = self._key_seconds(tier, t)
+            t.add(accesses, bytes_each, self.model[tier].min_grain_B)
+            self.parallel_s[tier.value] += self._key_seconds(tier, t) - before
+        else:
+            t.add(accesses, bytes_each, self.model[tier].min_grain_B)
+
+    def _key_seconds(self, tier: Tier, t: "Traffic") -> float:
+        """Time one stage key's traffic occupies a tier (see tier_seconds)."""
+        spec = self.model[tier]
+        lat = t.accesses * spec.latency_s / spec.parallelism
+        bw = t.bytes / spec.bandwidth_Bps
+        return max(lat, bw)
 
     def add_compute(self, seconds: float) -> None:
         self.compute_s += seconds
@@ -91,14 +113,16 @@ class QueryCost:
         and a latency-bound tier hides the (smaller) transfer time inside
         its access pipeline.
         """
-        spec = self.model[tier]
+        if tier.value in self.parallel_s:
+            return self.parallel_s[tier.value]
         total = 0.0
         for key, t in self.ledger.items():
-            if not key.endswith(tier.value):
+            # keys are "stage:tier" — parse the tier component instead of
+            # suffix-matching, so a stage name can never alias a tier (e.g.
+            # a stage literally called "overssd" must not match Tier.SSD).
+            if key.rsplit(":", 1)[-1] != tier.value:
                 continue
-            lat = t.accesses * spec.latency_s / spec.parallelism
-            bw = t.bytes / spec.bandwidth_Bps
-            total += max(lat, bw)
+            total += self._key_seconds(tier, t)
         return total
 
     def total_seconds(self) -> float:
@@ -113,19 +137,57 @@ class QueryCost:
         return out
 
     def merge(self, other: "QueryCost") -> "QueryCost":
-        """Fold another ledger's traffic + compute into this one (in place).
+        """Fold another ledger's traffic + compute into this one (in place),
+        with SERIAL semantics: the other batch ran after this one, so times
+        add — as do traffic and compute.
 
-        Used by serving to keep a running total across request batches.
+        Used by serving to keep a running total across request batches.  If
+        either side has been parallel-folded (``parallel_s`` set), per-tier
+        times are re-frozen as the sum of both sides' times, since the
+        pooled traffic can no longer reproduce them.
         """
+        if self.parallel_s or other.parallel_s:
+            frozen = {t.value: self.tier_seconds(t) + other.tier_seconds(t)
+                      for t in Tier}
+        else:
+            frozen = None
         for key, t in other.ledger.items():
             mine = self.ledger.setdefault(key, Traffic())
             mine.accesses += t.accesses
             mine.bytes += t.bytes
         self.compute_s += other.compute_s
+        if frozen is not None:
+            self.parallel_s = frozen
+        return self
+
+    def merge_parallel(self, other: "QueryCost") -> "QueryCost":
+        """Fold a CONCURRENT lane's ledger into this one (in place).
+
+        Overlap model (documented like ``tier_seconds``'s ``max(lat, bw)``):
+        parallel shards run at the same time on disjoint channel slices, so
+        traffic (accesses + bytes) SUMS — the capacity-planning view: every
+        lane really moved its bytes — while per-tier time and compute take
+        the MAX across lanes: the batch completes when the slowest lane
+        does.  Chaining ``a.merge_parallel(b).merge_parallel(c)`` folds any
+        number of lanes (max is associative).
+
+        After this call per-tier times are frozen in ``parallel_s``; later
+        ``record``s (serial work after the parallel phase) and ``merge``s
+        extend the frozen times additively.
+        """
+        frozen = {t.value: max(self.tier_seconds(t), other.tier_seconds(t))
+                  for t in Tier}
+        for key, t in other.ledger.items():
+            mine = self.ledger.setdefault(key, Traffic())
+            mine.accesses += t.accesses
+            mine.bytes += t.bytes
+        self.compute_s = max(self.compute_s, other.compute_s)
+        self.parallel_s = frozen
         return self
 
     def copy(self) -> "QueryCost":
         c = QueryCost(model=dict(self.model))
         c.ledger = {k: dataclasses.replace(v) for k, v in self.ledger.items()}
         c.compute_s = self.compute_s
+        c.parallel_s = dict(self.parallel_s)
         return c

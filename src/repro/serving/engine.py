@@ -67,19 +67,36 @@ class Retriever:
 
     ``total_cost`` accumulates traffic across requests (capacity-planning
     view); each ``retrieve`` also returns the per-call QueryCost.
+
+    ``shards`` > 1 selects the sharded datapath (``anns.sharding``): the
+    database is partitioned across a ``("search",)`` device mesh and each
+    retrieval's per-shard ledgers arrive pre-folded under the
+    parallel-shard model (max time across shards, summed bytes);
+    ``total_cost`` then accumulates those calls serially as usual.
+    Requires the IVF front and ``shards`` visible devices.
     """
 
     index: FaTRQIndex
     front: str = "ivf"
     backend: str = "reference"
     micro_batch: int | None = 8
+    shards: int | None = None
     total_cost: QueryCost = field(default_factory=QueryCost)
 
     def retrieve(self, queries: jax.Array, *, k: int
                  ) -> tuple[jax.Array, QueryCost]:
-        ex = make_executor(self.index, front=self.front,
-                           backend=self.backend,
-                           micro_batch=self.micro_batch)
+        if self.shards is not None:
+            if self.front != "ivf":
+                raise ValueError("sharded retrieval supports front='ivf' "
+                                 "only")
+            from repro.anns.sharding import make_sharded_executor
+            ex = make_sharded_executor(self.index, shards=self.shards,
+                                       backend=self.backend,
+                                       micro_batch=self.micro_batch)
+        else:
+            ex = make_executor(self.index, front=self.front,
+                               backend=self.backend,
+                               micro_batch=self.micro_batch)
         ids, cost = ex.search(queries, k=k)
         self.total_cost.merge(cost)
         return ids, cost

@@ -111,6 +111,35 @@ class TestMicroBatching:
             2 * cost.ledger["rerank:ssd"].accesses
 
 
+class TestMultiLevelTraffic:
+    def test_deeper_levels_charged_actual_survivors(self, ds):
+        # Level ℓ ≥ 1 codes stream only for survivors of level ℓ−1, so the
+        # ledger must charge the per-level entering counts emitted by the
+        # backends (refine_alive_l{ℓ}) — NOT the final survivor count,
+        # which under-charges every intermediate level (the alive chain
+        # only shrinks).
+        cfg = PipelineConfig(dim=64, pq_m=8, pq_k=64, nlist=32, nprobe=8,
+                             final_k=10, refine_budget=40, trq_levels=3)
+        idx = build(jax.random.PRNGKey(6), ds.x, cfg)
+        ex = make_executor(idx)
+        cand = ex.front.candidates(ds.queries)
+        refined = ex.backend.refine(ds.queries, cand, idx.trq, k=10,
+                                    bound=cfg.bound, z=cfg.z)
+        n_l1 = int(refined.counters["refine_alive_l1"])
+        n_l2 = int(refined.counters["refine_alive_l2"])
+        n_final = int(refined.counters["refine_alive"])
+        assert n_l1 >= n_l2 >= n_final          # monotone pruning chain
+        _, cost = ex.search(ds.queries, k=10)
+        n_cand = cost.ledger["coarse:hbm"].accesses
+        assert cost.ledger["refine:cxl"].accesses == n_cand + n_l1 + n_l2
+        # bytes bill at the tier's min transfer grain when records are small
+        from repro.memory import Tier
+        per_access = max(idx.layout.far_bytes,
+                         cost.model[Tier.CXL].min_grain_B)
+        assert cost.ledger["refine:cxl"].bytes == \
+            (n_cand + n_l1 + n_l2) * per_access
+
+
 class TestCostFlow:
     def test_counters_are_device_side(self, ds, index):
         cand = make_executor(index).front.candidates(ds.queries[:4])

@@ -1,4 +1,6 @@
-"""Serving engine + RAG loop integration tests."""
+"""Serving engine + RAG loop integration tests, plus the serving-side cost
+accounting: ``Retriever.total_cost`` accumulation, ``QueryCost`` merge /
+copy round-trips, and the parallel-shard fold (``merge_parallel``)."""
 
 import jax
 import jax.numpy as jnp
@@ -7,8 +9,9 @@ import pytest
 from repro.anns import PipelineConfig, build
 from repro.configs import ARCHS
 from repro.data import make_dataset
+from repro.memory import QueryCost, Tier
 from repro.models import build_model
-from repro.serving import Engine, rag_answer
+from repro.serving import Engine, Retriever, rag_answer
 
 
 @pytest.fixture(scope="module")
@@ -58,3 +61,124 @@ class TestRAG:
         assert gen.shape == (2, 4) and ids.shape == (2, 5)
         assert cost.total_seconds() > 0
         assert eng.stats.retrievals == 2
+
+
+# ------------------------------------------------------- cost accounting
+
+
+def _cost(stage_tier_traffic, compute=0.0):
+    c = QueryCost()
+    for stage, tier, accesses, bytes_each in stage_tier_traffic:
+        c.record(stage, tier, accesses, bytes_each)
+    c.add_compute(compute)
+    return c
+
+
+class TestQueryCostAccounting:
+    def test_merge_sums_traffic_and_compute(self):
+        a = _cost([("refine", Tier.CXL, 100, 64)], compute=1.0)
+        b = _cost([("refine", Tier.CXL, 50, 64),
+                   ("rerank", Tier.SSD, 10, 4096)], compute=2.0)
+        ta, tb = a.tier_seconds(Tier.CXL), b.tier_seconds(Tier.CXL)
+        a.merge(b)
+        assert a.ledger["refine:cxl"].accesses == 150
+        assert a.ledger["rerank:ssd"].accesses == 10
+        assert a.compute_s == 3.0
+        # serial semantics: pooled traffic yields summed time
+        assert a.tier_seconds(Tier.CXL) == pytest.approx(ta + tb)
+
+    def test_copy_round_trip_is_independent(self):
+        a = _cost([("refine", Tier.CXL, 100, 64)], compute=1.0)
+        b = a.copy()
+        assert b.ledger["refine:cxl"].accesses == 100
+        assert b.total_seconds() == a.total_seconds()
+        b.record("refine", Tier.CXL, 1, 64)
+        b.add_compute(5.0)
+        assert a.ledger["refine:cxl"].accesses == 100
+        assert a.compute_s == 1.0
+
+    def test_merge_parallel_max_time_sum_bytes(self):
+        fast = _cost([("refine", Tier.CXL, 100, 64)], compute=1.0)
+        slow = _cost([("refine", Tier.CXL, 300, 64)], compute=2.0)
+        t_fast = fast.tier_seconds(Tier.CXL)
+        t_slow = slow.tier_seconds(Tier.CXL)
+        merged = fast.merge_parallel(slow)
+        # bytes/accesses SUM (every lane really moved its bytes) ...
+        assert merged.ledger["refine:cxl"].accesses == 400
+        assert merged.ledger["refine:cxl"].bytes == 400 * 64
+        # ... but time is the slowest lane, not the serial sum
+        assert merged.tier_seconds(Tier.CXL) == pytest.approx(t_slow)
+        assert merged.tier_seconds(Tier.CXL) < t_fast + t_slow
+        assert merged.compute_s == 2.0
+
+    def test_merge_parallel_chains_and_serial_merge_freezes(self):
+        lanes = [_cost([("refine", Tier.CXL, n, 64)])
+                 for n in (100, 250, 50)]
+        t_max = max(c.tier_seconds(Tier.CXL) for c in lanes)
+        merged = lanes[0]
+        for c in lanes[1:]:
+            merged.merge_parallel(c)
+        assert merged.tier_seconds(Tier.CXL) == pytest.approx(t_max)
+        # a later SERIAL merge (next request batch) adds times again
+        before = merged.tier_seconds(Tier.CXL)
+        nxt = _cost([("refine", Tier.CXL, 100, 64)])
+        t_nxt = nxt.tier_seconds(Tier.CXL)
+        merged.merge(nxt)
+        assert merged.tier_seconds(Tier.CXL) == pytest.approx(before + t_nxt)
+
+    def test_record_after_parallel_fold_extends_time(self):
+        # serial work recorded AFTER a parallel fold (e.g. an unsharded
+        # search accumulating into a sharded call's ledger via cost=) must
+        # still show up in time, additively on the frozen lane maximum
+        a = _cost([("refine", Tier.CXL, 100, 64)])
+        a.merge_parallel(_cost([("refine", Tier.CXL, 50, 64)]))
+        t_cxl = a.tier_seconds(Tier.CXL)
+        ref = _cost([("rerank", Tier.SSD, 10, 4096)])
+        a.record("rerank", Tier.SSD, 10, 4096)
+        assert a.tier_seconds(Tier.SSD) == \
+            pytest.approx(ref.tier_seconds(Tier.SSD))
+        assert a.tier_seconds(Tier.CXL) == pytest.approx(t_cxl)
+
+    def test_tier_matching_parses_tier_component(self):
+        # a stage name that merely ENDS in a tier string must not alias the
+        # tier (the old endswith matching was fragile for colon-free keys)
+        from repro.memory import Traffic
+        c = QueryCost()
+        c.ledger["stage_overssd"] = Traffic(accesses=10, bytes=4096)
+        assert c.tier_seconds(Tier.SSD) == 0.0
+        c.record("rerank", Tier.SSD, 10, 4096)
+        assert c.tier_seconds(Tier.SSD) > 0.0
+
+
+class TestRetrieverAccounting:
+    @pytest.fixture(scope="class")
+    def small_index(self):
+        ds = make_dataset(jax.random.PRNGKey(7), n=1500, d=16, n_queries=8)
+        cfg = PipelineConfig(dim=16, pq_m=4, pq_k=16, nlist=8, nprobe=2,
+                             final_k=5, refine_budget=10)
+        return ds, build(jax.random.PRNGKey(8), ds.x, cfg)
+
+    def test_total_cost_accumulates_across_calls(self, small_index):
+        ds, index = small_index
+        r = Retriever(index=index, micro_batch=4)
+        _, c1 = r.retrieve(ds.queries, k=5)
+        _, c2 = r.retrieve(ds.queries, k=5)
+        for key in c1.ledger:
+            assert r.total_cost.ledger[key].accesses == \
+                c1.ledger[key].accesses + c2.ledger[key].accesses
+            assert r.total_cost.ledger[key].bytes == \
+                c1.ledger[key].bytes + c2.ledger[key].bytes
+        assert r.total_cost.compute_s == pytest.approx(
+            c1.compute_s + c2.compute_s)
+
+    def test_sharded_retriever_single_device(self, small_index):
+        # shards=1 runs the sharded datapath on this container; per-call
+        # ledgers match the unsharded retriever's exactly at S=1
+        ds, index = small_index
+        plain = Retriever(index=index, micro_batch=None)
+        sharded = Retriever(index=index, micro_batch=None, shards=1)
+        ids_p, cost_p = plain.retrieve(ds.queries, k=5)
+        ids_s, cost_s = sharded.retrieve(ds.queries, k=5)
+        assert jnp.array_equal(ids_p, ids_s)
+        assert {k: (t.accesses, t.bytes) for k, t in cost_p.ledger.items()} \
+            == {k: (t.accesses, t.bytes) for k, t in cost_s.ledger.items()}
