@@ -1,0 +1,118 @@
+"""Streaming index churn benchmark: insert rate, search latency under
+delta/tombstone pressure, and compaction cost.
+
+Three sweeps over a ``StreamingIndex`` wrapping the shared benchmark
+database (drift auto-fold disabled so each operating point is measured in
+isolation):
+
+* insert-rate — wall-µs per inserted row at growing batch sizes (the
+  incremental encode + delta append path);
+* search-vs-delta — p50 search wall time and model-time QPS as the delta
+  fraction grows (delta candidates stream from far memory on the distinct
+  ``delta:cxl`` ledger entry);
+* search-vs-tombstones — the same sweep against tombstone fraction (dead
+  candidates are masked in the front, so wall time stays flat while
+  model-time traffic drops), ending with the ``compact()`` cost and the
+  post-compaction search time.
+
+Standalone: ``python benchmarks/bench_streaming.py`` writes
+``BENCH_bench_streaming.json``; ``benchmarks/run.py`` includes it in the
+full sweep.
+"""
+
+from __future__ import annotations
+
+import sys
+
+if __name__ == "__main__":
+    import os
+
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [os.path.join(_root, "src"), _root]
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import dataset, emit, fatrq_index, time_call, \
+    write_json
+from repro.anns import StreamingConfig, StreamingIndex
+from repro.data import make_embeddings
+
+_K = 10
+
+
+def _p50_search(st, queries):
+    us = time_call(lambda q: st.search(q, k=_K)[0], queries)
+    _, cost = st.search(queries, k=_K)
+    return us, cost
+
+
+def run() -> None:
+    ds, index = fatrq_index()
+    st = StreamingIndex(index, StreamingConfig(auto_compact=False))
+    q = ds.queries
+    nq = q.shape[0]
+    stream = np.asarray(make_embeddings(jax.random.PRNGKey(42), 8000,
+                                        ds.x.shape[1]))
+
+    # --- insert rate vs batch size (amortized µs/row, includes encode)
+    off = 0
+    for batch in (64, 512, 4096):
+        x_new = stream[off:off + batch]
+        off += batch
+        t0 = time.perf_counter()
+        st.insert(x_new)
+        jax.block_until_ready(st.x)
+        dt = time.perf_counter() - t0
+        emit(f"stream_insert_b{batch}_us_per_row", dt / batch * 1e6,
+             f"rows_per_s={batch / dt:.0f}", batch=batch,
+             rows_per_s=batch / dt)
+
+    # --- search latency vs delta fraction (fresh index per point)
+    for frac in (0.0, 0.1, 0.25):
+        stf = StreamingIndex(index, StreamingConfig(auto_compact=False))
+        n_ins = int(frac * len(stf))
+        if n_ins:
+            stf.insert(stream[:n_ins])
+        us, cost = _p50_search(stf, q)
+        t = cost.total_seconds()
+        delta_b = sum(tr.bytes for k, tr in cost.ledger.items()
+                      if k.startswith("delta:"))
+        emit(f"stream_search_delta{int(frac * 100)}pct_us", us / nq,
+             f"qps_model={nq / t:.0f};delta_B={delta_b}", cost=cost,
+             qps=nq / t, delta_frac=frac)
+
+    # --- search latency vs tombstone fraction, then compaction
+    stt = StreamingIndex(index, StreamingConfig(auto_compact=False))
+    stt.insert(stream[:2000])
+    rng = np.random.default_rng(0)
+    n0 = len(stt)
+    for frac in (0.1, 0.25):
+        target = int(frac * n0) - stt.n_tombstones
+        live = np.fromiter(stt._gid_row.keys(), np.int64)
+        stt.delete(rng.choice(live, size=target, replace=False))
+        us, cost = _p50_search(stt, q)
+        t = cost.total_seconds()
+        emit(f"stream_search_tomb{int(frac * 100)}pct_us", us / nq,
+             f"qps_model={nq / t:.0f}", cost=cost, qps=nq / t,
+             tombstone_frac=stt.drift()["tombstone_frac"])
+
+    t0 = time.perf_counter()
+    stats = stt.compact()
+    jax.block_until_ready(stt.x)
+    dt = time.perf_counter() - t0
+    emit("stream_compact_us_per_row", dt / max(stats["n_live"], 1) * 1e6,
+         f"folded={stats['folded_delta_rows']};"
+         f"dropped={stats['dropped_tombstones']}", **stats)
+    us, cost = _p50_search(stt, q)
+    emit("stream_search_post_compact_us", us / nq,
+         f"qps_model={nq / cost.total_seconds():.0f}", cost=cost,
+         qps=nq / cost.total_seconds())
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()
+    write_json("bench_streaming")

@@ -17,9 +17,16 @@ Layers, bottom-up:
   Top-k ids are bit-identical to the unsharded executor (up to exact-f32
   estimate ties at the SSD budget boundary, e.g. duplicate rows — see
   ``sharding._rerank_survivors_sharded``).
+* ``streaming`` — the mutable layer: ``StreamingIndex`` wraps a built
+  index with online ``insert``/``delete`` (incremental TRQ encode, per-list
+  delta spill pages, tombstone bitmap), a generation-aware search path that
+  probes base ∪ delta lists under one QueryCost ledger (delta traffic on a
+  distinct ``delta:cxl`` entry), and drift-triggered ``compact()`` /
+  ``rebalance()`` through the same LPT partitioner the sharded subsystem
+  uses.
 * ``pipeline`` — the stable facade: ``build`` (offline index build) and
   ``search(..., front=, backend=, shards=)`` / ``baseline_search`` /
-  ``recall_at_k``.
+  ``recall_at_k`` (``search`` also accepts a ``StreamingIndex``).
 """
 
 from repro.anns.executor import SearchExecutor, make_executor
@@ -30,12 +37,14 @@ from repro.anns.sharding import (ShardedExecutor, ShardedIndex,
 from repro.anns.stages import (Candidates, FrontStage, GraphFrontStage,
                                IVFFrontStage, PallasRefineBackend, Refined,
                                RefineBackend, ReferenceRefineBackend)
+from repro.anns.streaming import StreamingConfig, StreamingIndex
 
 __all__ = ["FaTRQIndex", "PipelineConfig", "baseline_search", "build",
            "recall_at_k", "search",
            "SearchExecutor", "make_executor",
            "ShardedExecutor", "ShardedIndex", "make_sharded_executor",
            "partition_database",
+           "StreamingConfig", "StreamingIndex",
            "Candidates", "Refined", "FrontStage", "RefineBackend",
            "IVFFrontStage", "GraphFrontStage",
            "ReferenceRefineBackend", "PallasRefineBackend"]

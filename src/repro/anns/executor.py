@@ -194,7 +194,19 @@ def fold_counts(counts: dict[str, int], *, cost: QueryCost | None, config,
     # final-survivor count is only a fallback for legacy counter dicts
     # that predate per-level counters (it UNDER-charges levels 1..L−1,
     # since the mask chain is monotonically shrinking).
-    cost.record("refine", Tier.CXL, n_cand, layout.far_bytes)
+    # Candidates that came off delta pages (streaming subsystem, counter
+    # ``delta_cand``) stream the SAME far-memory bytes but are billed to a
+    # DISTINCT ledger entry so delta-list traffic stays visible; static
+    # indexes never emit the counter and their ledgers are unchanged.
+    # Scope: the split covers the LEVEL-0 stream (every candidate) — the
+    # dominant delta traffic, since delta lists are short-lived between
+    # compactions.  Levels ℓ ≥ 1 would need per-level delta survivor masks
+    # threaded through both backends; their (survivor-only) traffic is
+    # charged to the shared "refine" entry, mixing base and delta rows.
+    n_delta = counts.get("delta_cand", 0)
+    cost.record("refine", Tier.CXL, n_cand - n_delta, layout.far_bytes)
+    if n_delta:
+        cost.record("delta", Tier.CXL, n_delta, layout.far_bytes)
     for lv in range(1, config.trq_levels):
         n_lv = counts.get(f"refine_alive_l{lv}", n_alive)
         cost.record("refine", Tier.CXL, n_lv, layout.far_bytes)

@@ -131,7 +131,18 @@ def search(index: FaTRQIndex, queries: jax.Array, *, k: int | None = None,
     IVF lists onto a 1-D ``("search",)`` mesh (needs that many devices)
     and per-shard top-k + cost ledgers are merged — top-k ids are
     identical to the unsharded path; requires the IVF front.
+
+    ``index`` may also be a ``StreamingIndex`` (``anns.streaming``): the
+    call routes through its generation-aware datapath (base ∪ delta lists,
+    tombstones masked) and returns stable GLOBAL ids; IVF front only.
     """
+    from repro.anns.streaming import StreamingIndex
+    if isinstance(index, StreamingIndex):
+        if (front or index.config.front) != "ivf":
+            raise ValueError("streaming search supports the IVF front only "
+                             "(delta pages hang off inverted lists)")
+        return index.search(queries, k=k, backend=backend, cost=cost,
+                            shards=shards)
     cfg = index.config
     if shards is not None:
         if (front or cfg.front) != "ivf":
@@ -160,10 +171,18 @@ def baseline_search(index: FaTRQIndex, queries: jax.Array, *,
 
 
 def recall_at_k(pred: jax.Array, gt: jax.Array, k: int) -> float:
-    """recall@k with gt (Q, ≥k)."""
-    hits = 0
+    """recall@k with gt (Q, ≥k).
+
+    Vectorized set-intersection: a broadcast membership test replaces the
+    per-row Python ``set`` loop.  ``first`` keeps only the first occurrence
+    of a repeated prediction so duplicate ids still count once, exactly the
+    old ``len(set(p) & set(g))`` semantics (the ``any`` over gt already
+    dedups that side).
+    """
     p = np.asarray(pred)[:, :k]
     g = np.asarray(gt)[:, :k]
-    for i in range(p.shape[0]):
-        hits += len(set(p[i].tolist()) & set(g[i].tolist()))
-    return hits / (p.shape[0] * k)
+    kk = p.shape[1]
+    hit = (p[:, :, None] == g[:, None, :]).any(axis=2)        # (Q, kk)
+    first = ~((p[:, :, None] == p[:, None, :])
+              & np.tril(np.ones((kk, kk), bool), -1)[None]).any(axis=2)
+    return float((hit & first).sum()) / (p.shape[0] * k)

@@ -128,12 +128,30 @@ class ShardedIndex:
             x=put_s(self.x), gid=put_s(self.gid))
 
 
+def lpt_assign(lens: np.ndarray, n_shards: int
+               ) -> tuple[list[list[int]], np.ndarray]:
+    """LPT greedy list→shard assignment: sort lists by member count
+    descending, place each on the currently lightest shard.  Bounds the
+    heaviest shard at (4/3 − 1/3S)× the optimum.  Returns (per-shard list
+    ids, per-shard loads).  Shared by ``partition_database`` and the
+    streaming subsystem's drift metric / ``rebalance()``
+    (anns/streaming.py), so the rebalance trigger tests the exact bound
+    the partitioner guarantees.
+    """
+    order = np.argsort(-lens, kind="stable")
+    loads = np.zeros(n_shards, np.int64)
+    members: list[list[int]] = [[] for _ in range(n_shards)]
+    for li in order:
+        s = int(np.argmin(loads))
+        members[s].append(int(li))
+        loads[s] += int(lens[li])
+    return members, loads
+
+
 def partition_database(index, n_shards: int) -> ShardedIndex:
     """IVF-list-aware partitioner: whole inverted lists → shards.
 
-    Lists are assigned with an LPT greedy — sort by member count
-    descending, place each on the currently lightest shard — which bounds
-    the heaviest shard at (4/3 − 1/3S)× the optimum.  All per-record
+    Lists are assigned with the ``lpt_assign`` greedy.  All per-record
     arrays (PQ codes, TRQ levels + scalars, full vectors) are gathered into
     shard-local row order so the per-shard datapath indexes them densely.
     """
@@ -145,13 +163,7 @@ def partition_database(index, n_shards: int) -> ShardedIndex:
         raise ValueError(f"n_shards={n_shards} must be in [1, nlist={nlist}]"
                          f" — whole lists are the partitioning unit")
 
-    order = np.argsort(-lens, kind="stable")
-    loads = np.zeros(n_shards, np.int64)
-    members: list[list[int]] = [[] for _ in range(n_shards)]
-    for li in order:
-        s = int(np.argmin(loads))
-        members[s].append(int(li))
-        loads[s] += int(lens[li])
+    members, _ = lpt_assign(lens, n_shards)
 
     lmax = max(len(m) for m in members)
     rows_per: list[np.ndarray] = []

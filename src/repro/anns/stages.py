@@ -19,6 +19,12 @@ Every stage returns *device-side* counters (0-d int32 arrays) alongside its
 arrays; the executor folds them into a ``memory.QueryCost`` ledger with one
 host transfer per search call (see ``executor.py``).  Stages also own their
 traffic model via ``fold_cost`` so the executor stays backend-agnostic.
+
+The streaming subsystem (``anns.streaming``) reuses the same pieces: its
+generation-aware IVF front emits the extra ``delta_cand`` counter (delta-
+page candidates, billed to a distinct far-memory ledger entry) and both
+refine backends score base and delta rows in one candidate batch — the
+``Candidates``/``Refined`` contracts are unchanged.
 """
 
 from __future__ import annotations
@@ -97,9 +103,13 @@ def fold_ivf_front_cost(cost: QueryCost, counts: dict[str, int],
                         layout: RecordLayout) -> None:
     """IVF front traffic model: PQ codes + LUT live in fast memory (HBM).
 
-    Shared by ``IVFFrontStage.fold_cost`` and the per-shard fold in
-    ``anns.sharding`` (the sharded front is IVF-only), so the two ledgers
-    cannot drift apart.
+    Shared by ``IVFFrontStage.fold_cost``, the per-shard fold in
+    ``anns.sharding``, and the streaming front in ``anns.streaming`` (both
+    are IVF-only), so the ledgers cannot drift apart.  ``front_cand``
+    counts base AND delta candidates — delta rows' PQ codes are appended
+    into the same fast-memory store; only their far-memory stream is
+    billed separately (the ``delta_cand`` counter in
+    ``executor.fold_counts``).
     """
     cost.record("coarse", Tier.HBM, counts["front_cand"], layout.fast_bytes)
 

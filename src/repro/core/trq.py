@@ -91,6 +91,61 @@ def encode_database(x: jax.Array, x_c: jax.Array, *, num_levels: int = 1
     return codes, raw
 
 
+def encode_rows(x_new: jax.Array, x_c_new: jax.Array, *, num_levels: int = 1,
+                model: calib.CalibrationModel | None = None) -> TRQCodes:
+    """Incremental encode: TRQ codes for ``x_new`` (B, D) ONLY.
+
+    Every per-record quantity (``ternary_encode`` trits, level scalars,
+    ``compute_scalars``) is row-independent, so encoding a batch of new
+    rows in isolation is bit-identical to what a full ``encode_database``
+    over the grown database would produce for those rows — the streaming
+    subsystem (anns/streaming.py) appends the result with ``write_rows``
+    without touching existing rows.  ``model`` carries the already-fitted
+    calibration over (calibration is a property of the quantizers, not of
+    individual rows; default: identity).
+    """
+    codes, _ = encode_database(x_new, x_c_new, num_levels=num_levels)
+    if model is not None:
+        codes = TRQCodes(dim=codes.dim, levels=codes.levels,
+                         scalars=codes.scalars, model=model)
+    return codes
+
+
+def write_rows(dst: TRQCodes, src: TRQCodes, start: int) -> TRQCodes:
+    """Write ``src``'s rows into ``dst`` at ``start`` (functional append).
+
+    Applies ``lax.dynamic_update_slice`` to every per-record leaf (packed
+    codes + level scalars + record scalars); the calibration model and dim
+    come from ``dst``.  ``dst`` must have capacity ≥ start + len(src) —
+    the streaming row store over-allocates and grows host-side.
+    """
+    if dst.num_levels != src.num_levels or dst.dim != src.dim:
+        raise ValueError("write_rows: level/dim mismatch between dst and src")
+
+    def upd(d, s):
+        return jax.lax.dynamic_update_slice(
+            d, s.astype(d.dtype), (start,) + (0,) * (d.ndim - 1))
+
+    levels = tuple(jax.tree.map(upd, dl, sl)
+                   for dl, sl in zip(dst.levels, src.levels))
+    scalars = jax.tree.map(upd, dst.scalars, src.scalars)
+    return TRQCodes(dim=dst.dim, levels=levels, scalars=scalars,
+                    model=dst.model)
+
+
+def gather_rows(codes: TRQCodes, idx: jax.Array) -> TRQCodes:
+    """Row-gather every per-record leaf (packed codes, level scalars,
+    record scalars) at ``idx``; dim + calibration model pass through.
+    Compaction/snapshotting in the streaming subsystem moves packed codes
+    with this — codes are centroid-relative, so moving a row never needs a
+    re-encode."""
+    g = lambda a: a[idx]                                      # noqa: E731
+    return TRQCodes(dim=codes.dim,
+                    levels=tuple(jax.tree.map(g, lv) for lv in codes.levels),
+                    scalars=jax.tree.map(g, codes.scalars),
+                    model=codes.model)
+
+
 def unpack_level(codes: TRQCodes, level: int, idx: jax.Array | None = None
                  ) -> jax.Array:
     """Materialize int8 trits for (a subset of) records at one level."""

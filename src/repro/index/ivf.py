@@ -38,20 +38,42 @@ class IVFIndex:
         return self.lists.shape[1]
 
 
+def fill_lists(ids: np.ndarray, nlist: int, cap: int
+               ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Vectorized inverted-list fill: bucketize ``ids`` (N,) into a
+    (nlist, cap') id matrix (-1 padded) + per-list lengths.
+
+    No record is ever dropped: when the largest bucket exceeds ``cap`` the
+    capacity SPILLS to fit it (returned ``n_spilled`` counts the rows past
+    the requested cap, for skew monitoring).  Member order within each list
+    matches the original append order (ascending record id) via a stable
+    argsort, so the fill is a drop-in for the old O(N)-Python loop — minus
+    its silent overflow drop.  Shared by the offline ``build`` and the
+    streaming subsystem's ``compact()`` (anns/streaming.py).
+    """
+    n = ids.shape[0]
+    counts = np.bincount(ids, minlength=nlist).astype(np.int32)
+    n_spilled = int(np.maximum(counts - cap, 0).sum())
+    cap = max(cap, int(counts.max()) if n else 1, 1)
+    order = np.argsort(ids, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    pos = np.arange(n) - starts[ids[order]]
+    lists = np.full((nlist, cap), -1, np.int32)
+    lists[ids[order], pos] = order
+    return lists, counts, n_spilled
+
+
 def build(key: jax.Array, x: jax.Array, nlist: int, *, iters: int = 20,
           cap_factor: float = 3.0) -> IVFIndex:
     """Train centroids and fill inverted lists (host-side fill, device arrays
-    out).  cap = cap_factor × N/nlist bounds skew."""
+    out).  cap = cap_factor × N/nlist bounds skew; a hotter list spills the
+    capacity rather than silently dropping members (the pre-vectorization
+    fill loop lost any record past cap)."""
     n = x.shape[0]
     centroids = kmeans(key, x, nlist, iters)
     ids = np.asarray(assign(x, centroids))
     cap = int(cap_factor * n / nlist) + 1
-    lists = np.full((nlist, cap), -1, np.int32)
-    lens = np.zeros((nlist,), np.int32)
-    for i, c in enumerate(ids):
-        if lens[c] < cap:
-            lists[c, lens[c]] = i
-            lens[c] += 1
+    lists, lens, _ = fill_lists(ids, nlist, cap)
     return IVFIndex(centroids=jnp.asarray(centroids),
                     lists=jnp.asarray(lists), list_len=jnp.asarray(lens))
 

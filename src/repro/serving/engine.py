@@ -74,9 +74,15 @@ class Retriever:
     parallel-shard model (max time across shards, summed bytes);
     ``total_cost`` then accumulates those calls serially as usual.
     Requires the IVF front and ``shards`` visible devices.
+
+    ``index`` may also be a ``StreamingIndex`` (``anns.streaming``): live
+    traffic keeps retrieving between ``insert``/``delete`` calls through
+    its generation-aware datapath (IVF front only), ids stay stable global
+    ids across compactions, and delta-list traffic lands on the running
+    ledger's distinct ``delta:cxl`` entry.
     """
 
-    index: FaTRQIndex
+    index: "FaTRQIndex | StreamingIndex"    # noqa: F821
     front: str = "ivf"
     backend: str = "reference"
     micro_batch: int | None = 8
@@ -85,6 +91,17 @@ class Retriever:
 
     def retrieve(self, queries: jax.Array, *, k: int
                  ) -> tuple[jax.Array, QueryCost]:
+        from repro.anns.streaming import StreamingIndex
+        if isinstance(self.index, StreamingIndex):
+            if self.front != "ivf":
+                raise ValueError("streaming retrieval supports front='ivf' "
+                                 "only")
+            ids, cost = self.index.search(queries, k=k,
+                                          backend=self.backend,
+                                          micro_batch=self.micro_batch,
+                                          shards=self.shards)
+            self.total_cost.merge(cost)
+            return ids, cost
         if self.shards is not None:
             if self.front != "ivf":
                 raise ValueError("sharded retrieval supports front='ivf' "
