@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import dataset, emit, time_call
-from repro.anns import PipelineConfig, build, make_executor, recall_at_k
+from repro.anns import Database, PipelineConfig, QueryPlan, recall_at_k
 from repro.anns.executor import FRONT_STAGES, REFINE_BACKENDS
 from repro.core import (calibrate, encode_database, exact_distance_sq,
                         residual_ip_estimate, unpack_level)
@@ -35,20 +35,21 @@ def run_backends(n: int = 8000, d: int = 64, nq: int = 32) -> None:
                       k_gt=100, clusters=32)
     cfg = PipelineConfig(dim=d, pq_m=d // 8, pq_k=64, nlist=32, nprobe=8,
                          final_k=10, refine_budget=40)
-    index = build(jax.random.PRNGKey(1), ds.x, cfg)
+    db = Database.build(jax.random.PRNGKey(1), ds.x, cfg)
     for front in FRONT_STAGES:
         for backend in REFINE_BACKENDS:
-            ex = make_executor(index, front=front, backend=backend)
-            us = time_call(lambda: ex.search(ds.queries, k=10)[0],
+            plan = QueryPlan(front=front, backend=backend, k=10)
+            us = time_call(lambda: db.query(ds.queries, plan=plan).ids,
                            iters=3, warmup=1)
-            pred, cost = ex.search(ds.queries, k=10)
-            rec = recall_at_k(pred, ds.gt, 10)
-            bd = cost.breakdown()
+            res = db.query(ds.queries, plan=plan)
+            rec = recall_at_k(res.ids, ds.gt, 10)
+            bd = res.cost.breakdown()
             detail = ";".join(f"{t}={v * 1e6 / nq:.3f}us"
                               for t, v in bd.items() if v > 0)
             emit(f"executor_{front}_{backend}", us / nq,
                  f"recall={rec:.3f};model_total="
-                 f"{cost.total_seconds() * 1e6 / nq:.3f}us;{detail}")
+                 f"{res.cost.total_seconds() * 1e6 / nq:.3f}us;{detail}",
+                 cost=res.cost, plan=res.plan)
 
 
 def run(n: int = 20_000, d: int = 128, top: int = 100) -> None:

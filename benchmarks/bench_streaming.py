@@ -37,16 +37,19 @@ import numpy as np
 
 from benchmarks.common import dataset, emit, fatrq_index, time_call, \
     write_json
-from repro.anns import StreamingConfig, StreamingIndex
+from repro.anns import Database, StreamingConfig, StreamingIndex
 from repro.data import make_embeddings
 
 _K = 10
 
 
 def _p50_search(st, queries):
-    us = time_call(lambda q: st.search(q, k=_K)[0], queries)
-    _, cost = st.search(queries, k=_K)
-    return us, cost
+    """Planned search through the Database handle → (p50 µs, cost, the
+    resolved QueryPlan for the emitted record)."""
+    db = Database.wrap(st)
+    us = time_call(lambda q: db.query(q, k=_K).ids, queries)
+    res = db.query(queries, k=_K)
+    return us, res.cost, res.plan
 
 
 def run() -> None:
@@ -76,13 +79,13 @@ def run() -> None:
         n_ins = int(frac * len(stf))
         if n_ins:
             stf.insert(stream[:n_ins])
-        us, cost = _p50_search(stf, q)
+        us, cost, plan = _p50_search(stf, q)
         t = cost.total_seconds()
         delta_b = sum(tr.bytes for k, tr in cost.ledger.items()
                       if k.startswith("delta:"))
         emit(f"stream_search_delta{int(frac * 100)}pct_us", us / nq,
              f"qps_model={nq / t:.0f};delta_B={delta_b}", cost=cost,
-             qps=nq / t, delta_frac=frac)
+             plan=plan, qps=nq / t, delta_frac=frac)
 
     # --- search latency vs tombstone fraction, then compaction
     stt = StreamingIndex(index, StreamingConfig(auto_compact=False))
@@ -93,10 +96,10 @@ def run() -> None:
         target = int(frac * n0) - stt.n_tombstones
         live = np.fromiter(stt._gid_row.keys(), np.int64)
         stt.delete(rng.choice(live, size=target, replace=False))
-        us, cost = _p50_search(stt, q)
+        us, cost, plan = _p50_search(stt, q)
         t = cost.total_seconds()
         emit(f"stream_search_tomb{int(frac * 100)}pct_us", us / nq,
-             f"qps_model={nq / t:.0f}", cost=cost, qps=nq / t,
+             f"qps_model={nq / t:.0f}", cost=cost, plan=plan, qps=nq / t,
              tombstone_frac=stt.drift()["tombstone_frac"])
 
     t0 = time.perf_counter()
@@ -106,10 +109,10 @@ def run() -> None:
     emit("stream_compact_us_per_row", dt / max(stats["n_live"], 1) * 1e6,
          f"folded={stats['folded_delta_rows']};"
          f"dropped={stats['dropped_tombstones']}", **stats)
-    us, cost = _p50_search(stt, q)
+    us, cost, plan = _p50_search(stt, q)
     emit("stream_search_post_compact_us", us / nq,
          f"qps_model={nq / cost.total_seconds():.0f}", cost=cost,
-         qps=nq / cost.total_seconds())
+         plan=plan, qps=nq / cost.total_seconds())
 
 
 if __name__ == "__main__":

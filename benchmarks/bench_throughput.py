@@ -45,8 +45,7 @@ if __name__ == "__main__":          # must run BEFORE anything imports jax
 import jax
 
 from benchmarks.common import dataset, emit, fatrq_index, write_json
-from repro.anns import make_executor, recall_at_k
-from repro.anns.sharding import make_sharded_executor
+from repro.anns import Database, QueryPlan, recall_at_k
 from repro.memory import QueryCost
 
 # host-CPU vs accelerator per-candidate filtering cost (calibrated to the
@@ -57,9 +56,10 @@ _HW_NS_PER_CAND = 45.0 / 3.7
 
 
 def _fatrq_cost(index, queries, *, hw: bool, front: str = "ivf"
-                ) -> tuple[float, QueryCost]:
-    ex = make_executor(index, front=front)
-    pred, cost = ex.search(queries, k=10)
+                ) -> tuple[float, QueryCost, QueryPlan]:
+    res = Database.wrap(index).query(queries,
+                                     plan=QueryPlan(front=front, k=10))
+    pred, cost = res.ids, res.cost
     rec = recall_at_k(pred, dataset().gt, 10)
     # replace the generic compute estimate with the mode-specific one
     total_cand = sum(t.accesses for k_, t in cost.ledger.items()
@@ -74,69 +74,73 @@ def _fatrq_cost(index, queries, *, hw: bool, front: str = "ivf"
             if key.startswith("refine:cxl"):
                 t = cost.ledger.pop(key)
                 cost.ledger[key.replace("cxl", "dram")] = t
-    return rec, cost
+    return rec, cost, res.plan
 
 
-def _shard_sweep(ds, index, *, max_shards: int | None) -> None:
+def _shard_sweep(ds, db: Database, *, max_shards: int | None) -> None:
     """Scale-out: shard the database across the host-platform mesh and
     report model-time QPS per shard count (parallel-shard fold)."""
     q = ds.queries
     nq = q.shape[0]
     avail = len(jax.devices())
-    limit = min(max_shards or avail, avail, index.ivf.nlist)
+    limit = min(max_shards or avail, avail, db.index.ivf.nlist)
     counts = [s for s in (1, 2, 4, 8, 16) if s <= limit]
     t1 = None
     for s in counts:
-        ex = make_sharded_executor(index, shards=s)
-        pred, cost = ex.search(q, k=10)
-        rec = recall_at_k(pred, ds.gt, 10)
-        t = cost.total_seconds()
+        res = db.query(q, plan=QueryPlan(shards=s, k=10))
+        rec = recall_at_k(res.ids, ds.gt, 10)
+        t = res.cost.total_seconds()
         t1 = t if t1 is None else t1
         emit(f"fig6_sharded_{s}x_qps", t / nq * 1e6,
-             f"recall={rec:.3f};scaleup={t1 / t:.2f}x", cost=cost,
-             qps=nq / t, shards=s)
+             f"recall={rec:.3f};scaleup={t1 / t:.2f}x", cost=res.cost,
+             plan=res.plan, qps=nq / t, shards=s)
 
 
 def run(*, max_shards: int | None = None) -> None:
     ds, index = fatrq_index()
+    db = Database.wrap(index)
     q = ds.queries
 
     # --- IVF front stage
-    base_pred, base_cost = make_executor(index).search_baseline(q, k=10)
-    base_rec = recall_at_k(base_pred, ds.gt, 10)
+    base = db.query(q, plan=QueryPlan(k=10, mode="baseline"))
+    base_rec = recall_at_k(base.ids, ds.gt, 10)
+    base_cost = base.cost
     t_base = base_cost.total_seconds()
 
-    rec_sw, cost_sw = _fatrq_cost(index, q, hw=False)
-    rec_hw, cost_hw = _fatrq_cost(index, q, hw=True)
+    rec_sw, cost_sw, plan_sw = _fatrq_cost(index, q, hw=False)
+    rec_hw, cost_hw, plan_hw = _fatrq_cost(index, q, hw=True)
     t_sw, t_hw = cost_sw.total_seconds(), cost_hw.total_seconds()
 
     nq = q.shape[0]
     emit("fig6_ivf_baseline_qps", t_base / nq * 1e6,
-         f"recall={base_rec:.3f}", cost=base_cost, qps=nq / t_base)
+         f"recall={base_rec:.3f}", cost=base_cost, plan=base.plan,
+         qps=nq / t_base)
     emit("fig6_ivf_fatrq_sw_qps", t_sw / nq * 1e6,
          f"recall={rec_sw:.3f};speedup={t_base / t_sw:.2f}x",
-         cost=cost_sw, qps=nq / t_sw)
+         cost=cost_sw, plan=plan_sw, qps=nq / t_sw)
     emit("fig6_ivf_fatrq_hw_qps", t_hw / nq * 1e6,
          f"recall={rec_hw:.3f};speedup={t_base / t_hw:.2f}x;"
-         f"hw_over_sw={t_sw / t_hw:.2f}x", cost=cost_hw, qps=nq / t_hw)
+         f"hw_over_sw={t_sw / t_hw:.2f}x", cost=cost_hw, plan=plan_hw,
+         qps=nq / t_hw)
 
     # --- CAGRA-style graph front stage through the same executor (fewer
     # candidates → smaller gain, matching the paper's IVF-vs-CAGRA ordering)
-    gex = make_executor(index, front="graph")
-    gbase_pred, cost_gb = gex.search_baseline(q, k=10)
-    gbase_rec = recall_at_k(gbase_pred, ds.gt, 10)
-    t_gbase = cost_gb.total_seconds()
+    gbase = db.query(q, plan=QueryPlan(front="graph", k=10,
+                                       mode="baseline"))
+    gbase_rec = recall_at_k(gbase.ids, ds.gt, 10)
+    t_gbase = gbase.cost.total_seconds()
 
-    rec_gf, cost_gf = _fatrq_cost(index, q, hw=True, front="graph")
+    rec_gf, cost_gf, plan_gf = _fatrq_cost(index, q, hw=True, front="graph")
     t_gf = cost_gf.total_seconds()
     emit("fig6_cagra_baseline_qps", t_gbase / nq * 1e6,
-         f"recall={gbase_rec:.3f}", cost=cost_gb, qps=nq / t_gbase)
+         f"recall={gbase_rec:.3f}", cost=gbase.cost, plan=gbase.plan,
+         qps=nq / t_gbase)
     emit("fig6_cagra_fatrq_hw_qps", t_gf / nq * 1e6,
          f"recall={rec_gf:.3f};speedup={t_gbase / t_gf:.2f}x",
-         cost=cost_gf, qps=nq / t_gf)
+         cost=cost_gf, plan=plan_gf, qps=nq / t_gf)
 
     # --- scale-out sweep through the sharded subsystem
-    _shard_sweep(ds, index, max_shards=max_shards)
+    _shard_sweep(ds, db, max_shards=max_shards)
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.anns import PipelineConfig, build
+from repro.anns import PipelineConfig, QueryPlan, build
 from repro.data import make_dataset
 from repro.memory import QueryCost
 
@@ -26,7 +26,15 @@ RECORDS: list[dict] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = "",
-         cost: QueryCost | None = None, **fields) -> None:
+         cost: QueryCost | None = None, plan: QueryPlan | None = None,
+         **fields) -> None:
+    """One CSV row + one structured record.
+
+    ``plan`` is the resolved ``QueryPlan`` the measurement ran under; it is
+    written into EVERY record (``None`` for rows that are not a planned
+    search, e.g. kernel micro-benchmarks) so perf points in the
+    ``BENCH_*.json`` trajectory are attributable to an exact plan.
+    """
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
     print(row)
@@ -36,6 +44,7 @@ def emit(name: str, us_per_call: float, derived: str = "",
     if cost is not None:
         rec["cost_breakdown_s"] = cost.breakdown()
         rec["cost_total_s"] = cost.total_seconds()
+    rec["plan"] = plan.to_record() if plan is not None else None
     rec.update(fields)
     RECORDS.append(rec)
 

@@ -1,12 +1,12 @@
-"""Quickstart: build a FaTRQ index and run progressive-refinement search.
+"""Quickstart: build a FaTRQ database and run planned progressive-
+refinement search through the unified ``Database`` API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 
-from repro.anns import PipelineConfig, baseline_search, build, recall_at_k, \
-    search
+from repro.anns import Database, PipelineConfig, QueryPlan, recall_at_k
 from repro.data import make_dataset
 
 
@@ -18,16 +18,19 @@ def main():
     cfg = PipelineConfig(dim=128, pq_m=16, pq_k=256, nlist=64, nprobe=8,
                          final_k=10, refine_budget=40, bound="cauchy")
     print("building index (PQ → IVF → TRQ encode → calibration)...")
-    index = build(jax.random.PRNGKey(1), ds.x, cfg)
-    print(f"  far-memory layout: {index.layout.describe()} bytes/record")
+    db = Database.build(jax.random.PRNGKey(1), ds.x, cfg)
+    print(f"  far-memory layout: {db.index.layout.describe()} bytes/record")
 
     print("searching (FaTRQ progressive refinement)...")
-    pred, cost = search(index, ds.queries, k=10)
-    rec = recall_at_k(pred, ds.gt, 10)
+    res = db.query(ds.queries, k=10)
+    rec = recall_at_k(res.ids, ds.gt, 10)
+    print(f"  resolved plan: {res.plan}")
+    print(f"  nearest distance (query 0): {float(res.distances[0, 0]):.4f}")
 
-    base_pred, base_cost = baseline_search(index, ds.queries, k=10)
-    base_rec = recall_at_k(base_pred, ds.gt, 10)
+    base = db.query(ds.queries, plan=QueryPlan(k=10, mode="baseline"))
+    base_rec = recall_at_k(base.ids, ds.gt, 10)
 
+    cost, base_cost = res.cost, base.cost
     ssd = sum(t.accesses for k, t in cost.ledger.items()
               if k.endswith("ssd"))
     ssd_b = sum(t.accesses for k, t in base_cost.ledger.items()

@@ -1,5 +1,7 @@
 """End-to-end RAG serving driver (paper Fig. 1): a small LM answers batched
-requests with FaTRQ retrieval in the loop.
+requests with FaTRQ retrieval in the loop, through the unified ``Database``
+API — the caller's ``QueryPlan`` (backend, shards, budget) threads all the
+way into the retriever instead of being silently dropped.
 
     PYTHONPATH=src python examples/rag_serving.py
 """
@@ -7,11 +9,11 @@ requests with FaTRQ retrieval in the loop.
 import jax
 import jax.numpy as jnp
 
-from repro.anns import PipelineConfig, build
+from repro.anns import Database, PipelineConfig, QueryPlan
 from repro.configs import ARCHS
 from repro.data import make_dataset
 from repro.models import build_model
-from repro.serving import Engine, rag_answer
+from repro.serving import Engine, Retriever, rag_answer
 
 
 def main():
@@ -21,13 +23,18 @@ def main():
     params = api.init(jax.random.PRNGKey(0))
     engine = Engine(api, params, batch=4, max_len=64)
 
-    # --- retriever: FaTRQ index over the document embedding store;
+    # --- retriever: FaTRQ database over the document embedding store;
     # embedding dim = the backbone's hidden size (DESIGN.md §4)
     d = cfg.d_model
     ds = make_dataset(jax.random.PRNGKey(1), n=8_000, d=d, n_queries=4)
     pcfg = PipelineConfig(dim=d, pq_m=16, pq_k=64, nlist=32, nprobe=8,
                           final_k=5, refine_budget=20)
-    index = build(jax.random.PRNGKey(2), ds.x, pcfg)
+    db = Database.build(jax.random.PRNGKey(2), ds.x, pcfg)
+
+    # the serving plan: validated once against the capability registry,
+    # compiled once into a cached executor, reused every request
+    plan = QueryPlan(front="ivf", backend="reference", micro_batch=4)
+    retriever = Retriever(index=db, plan=plan)
 
     # embed_fn stub: mean-pool the LM's token embeddings, project to store
     def embed_fn(tokens):
@@ -37,12 +44,16 @@ def main():
     prompts = jax.random.randint(jax.random.PRNGKey(3), (4, 8), 0,
                                  cfg.vocab)
     print("serving 4 batched RAG requests...")
-    gen, retrieved, cost = rag_answer(engine, index, embed_fn, prompts,
-                                      k=5, decode_steps=8)
+    gen, retrieved, cost = rag_answer(engine, db.index, embed_fn, prompts,
+                                      k=5, decode_steps=8,
+                                      retriever=retriever)
+    print(f"  resolved plan: {retriever.default_plan().resolve(pcfg)}")
     print(f"  retrieved ids (per request): {retrieved.tolist()}")
     print(f"  generated tokens: {gen.tolist()}")
     print(f"  retrieval cost breakdown: "
           f"{ {k: f'{v * 1e6:.1f}us' for k, v in cost.breakdown().items()} }")
+    print(f"  running ledger (capacity view): "
+          f"{ {k: t.accesses for k, t in retriever.total_cost.ledger.items()} }")
     print(f"  engine stats: {engine.stats}")
 
 

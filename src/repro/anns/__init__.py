@@ -24,14 +24,26 @@ Layers, bottom-up:
   distinct ``delta:cxl`` entry), and drift-triggered ``compact()`` /
   ``rebalance()`` through the same LPT partitioner the sharded subsystem
   uses.
+* ``registry`` — the capability registry: every front stage and refine
+  backend declares the index layouts (static / sharded / streaming) it
+  supports via ``register_front`` / ``register_backend``; unsupported
+  combinations raise ``PlanError`` at plan time.
+* ``api`` — the unified query surface: ``Database`` (one handle over
+  ``FaTRQIndex`` / ``ShardedIndex`` / ``StreamingIndex``), ``QueryPlan``
+  (frozen plan, validated once, compiled once into an executor cached per
+  (index generation, plan)), and ``SearchResult`` (ids + exact distances
+  + QueryCost + the resolved plan).
 * ``pipeline`` — the stable facade: ``build`` (offline index build) and
   ``search(..., front=, backend=, shards=)`` / ``baseline_search`` /
-  ``recall_at_k`` (``search`` also accepts a ``StreamingIndex``).
+  ``recall_at_k`` — thin shims over ``api.Database``, kept bit-identical
+  to their pre-plan-layer behavior.
 """
 
+from repro.anns.api import Database, PlanError, QueryPlan, SearchResult
 from repro.anns.executor import SearchExecutor, make_executor
 from repro.anns.pipeline import (FaTRQIndex, PipelineConfig, baseline_search,
                                  build, recall_at_k, search)
+from repro.anns.registry import register_backend, register_front
 from repro.anns.sharding import (ShardedExecutor, ShardedIndex,
                                  make_sharded_executor, partition_database)
 from repro.anns.stages import (Candidates, FrontStage, GraphFrontStage,
@@ -41,6 +53,8 @@ from repro.anns.streaming import StreamingConfig, StreamingIndex
 
 __all__ = ["FaTRQIndex", "PipelineConfig", "baseline_search", "build",
            "recall_at_k", "search",
+           "Database", "QueryPlan", "SearchResult", "PlanError",
+           "register_front", "register_backend",
            "SearchExecutor", "make_executor",
            "ShardedExecutor", "ShardedIndex", "make_sharded_executor",
            "partition_database",

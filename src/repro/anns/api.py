@@ -1,0 +1,316 @@
+"""Unified Database handle + QueryPlan capability layer.
+
+One query API over every physical index layout.  After the sharded and
+streaming subsystems landed, the entry points had forked: ``pipeline.search``
+and ``serving.Retriever`` each hand-rolled ``isinstance(StreamingIndex)``
+checks, ``shards``-vs-unsharded branches, per-call executor construction,
+and triplicated "IVF front only" error strings.  This module is the seam
+that replaces all of that — the same "one logical index, many physical
+layouts" shape COSMOS and AiSAQ expose over their CXL / all-in-storage
+backends:
+
+* ``Database`` — a uniform handle over ``FaTRQIndex`` (static),
+  ``ShardedIndex`` (mesh-partitioned) and ``StreamingIndex`` (mutable).
+  ``Database.build(key, x, config)`` builds a static index;
+  ``Database.wrap(index)`` adopts an existing one (cached on the index
+  instance, so facade callers share one handle and its executor cache).
+
+* ``QueryPlan`` — a frozen description of HOW to search: front stage,
+  refine backend, shard count, k, SSD refine budget, query micro-batch.
+  ``None`` fields resolve from the index config; the resolved plan is
+  **validated once** against the capability registry (``anns.registry``)
+  — every front stage / refine backend declares the layouts it supports —
+  and **compiled once** into an executor cached per
+  ``(index generation, plan, mesh)``.  Unsupported combinations raise
+  ``PlanError`` at plan time, never mid-search.
+
+* ``SearchResult`` — structured output: top-k ids, the exact squared-L2
+  distances of those ids (previously computed in every rerank and dropped
+  on the floor), the ``QueryCost`` traffic ledger, and the resolved plan
+  that produced them (so benchmark records are attributable).
+
+Executor-cache keying: the *generation* of a static/sharded index is
+always 0 (immutable); a ``StreamingIndex`` bumps its generation on every
+``insert``/``delete``/``compact``/``rebalance``, so a cached executor —
+including the sharded snapshot behind ``shards=S`` — is invalidated
+exactly when the physical layout changes.  Stale-generation entries are
+pruned so superseded device arrays are not pinned.
+
+``pipeline.search`` / ``baseline_search`` / ``serving.Retriever`` are thin
+shims over this module, bit-identical to their pre-refactor behavior.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.anns import registry
+from repro.anns.executor import make_executor, search_budget
+from repro.anns.pipeline import FaTRQIndex, PipelineConfig
+from repro.anns.pipeline import build as _build_index
+from repro.anns.registry import PlanError
+from repro.anns.sharding import ShardedExecutor, ShardedIndex, \
+    make_sharded_executor
+from repro.anns.streaming import StreamingIndex
+from repro.memory import QueryCost
+
+__all__ = ["Database", "QueryPlan", "SearchResult", "PlanError"]
+
+
+@dataclass(frozen=True)
+class QueryPlan:
+    """How to run a search.  ``None`` fields resolve from the index config
+    (``resolve``); a fully-resolved plan is hashable and keys the
+    compiled-executor cache.  ``mode="baseline"`` selects the no-refinement
+    comparison path (coarse ADC + full SSD rerank), static layout only."""
+
+    front: str | None = None          # "ivf" | "graph" | any registered
+    backend: str | None = None        # "reference" | "pallas"
+    shards: int | None = None         # None = unsharded; S ≥ 1 = mesh shards
+    k: int | None = None              # top-k; None → config.final_k
+    refine_budget: int | None = None  # max SSD fetches; None → config's
+    micro_batch: int | None = None    # queries/device step; None → config's
+    mode: str = "fatrq"               # "fatrq" | "baseline"
+
+    def resolve(self, config: PipelineConfig) -> "QueryPlan":
+        """Fill every ``None`` field from ``config`` (budget via the shared
+        ``executor.search_budget`` derivation, so plan-carrying paths stay
+        bit-identical to config-driven ones)."""
+        k = self.k or config.final_k
+        return dataclasses.replace(
+            self,
+            front=self.front or config.front,
+            backend=self.backend or config.backend,
+            k=k,
+            refine_budget=search_budget(config, k, self.refine_budget),
+            micro_batch=self.micro_batch if self.micro_batch is not None
+            else config.micro_batch)
+
+    def to_record(self) -> dict:
+        """JSON-friendly dict (benchmark records, logs)."""
+        return dataclasses.asdict(self)
+
+
+@dataclass(frozen=True)
+class SearchResult:
+    """Structured search output.
+
+    ``distances`` are the exact squared-L2 distances of ``ids`` computed by
+    the SSD rerank stage (+inf on padded slots when fewer than k candidates
+    survived); ``plan`` is the fully-resolved ``QueryPlan`` that produced
+    the result.
+    """
+
+    ids: jax.Array          # (Q, k) int32 — global database ids
+    distances: jax.Array    # (Q, k) f32 — exact squared L2 of ``ids``
+    cost: QueryCost         # the Table-I traffic ledger
+    plan: QueryPlan         # resolved plan (fully specified, hashable)
+
+
+def _layout_of(index) -> str:
+    if isinstance(index, StreamingIndex):
+        return "streaming"
+    if isinstance(index, ShardedIndex):
+        return "sharded"
+    if isinstance(index, FaTRQIndex):
+        return "static"
+    raise TypeError(f"cannot wrap {type(index).__name__}: expected "
+                    f"FaTRQIndex, ShardedIndex or StreamingIndex")
+
+
+class Database:
+    """Uniform query handle over one logical index in any physical layout.
+
+    ``query`` is the single entry point: resolve the plan against the
+    index config, validate it against the capability registry (raising
+    ``PlanError`` on unsupported combinations BEFORE any device work),
+    compile-or-fetch the executor for ``(generation, plan, mesh)``, run
+    it, and return a ``SearchResult``.
+    """
+
+    def __init__(self, index, *, layout: str | None = None):
+        self.index = index
+        self.layout = layout or _layout_of(index)
+        self._compiled: dict[tuple, tuple] = {}
+
+    # -- construction -----------------------------------------------------
+
+    @classmethod
+    def build(cls, key: jax.Array, x: jax.Array,
+              config: PipelineConfig) -> "Database":
+        """Offline build (PQ → IVF → TRQ encode → calibration) wrapped in a
+        fresh handle."""
+        return cls.wrap(_build_index(key, x, config))
+
+    @classmethod
+    def wrap(cls, index) -> "Database":
+        """Adopt an existing index.  The handle is cached ON the index
+        instance so every wrap of the same index shares one executor
+        cache (facade callers create handles per call)."""
+        if isinstance(index, Database):
+            return index
+        db = getattr(index, "_db_handle", None)
+        if db is None:
+            db = cls(index)
+            index._db_handle = db
+        return db
+
+    # -- introspection ----------------------------------------------------
+
+    @property
+    def config(self) -> PipelineConfig:
+        return self.index.config
+
+    @property
+    def generation(self) -> int:
+        """Physical-layout generation: 0 for immutable layouts; the
+        mutation counter for a ``StreamingIndex``."""
+        return getattr(self.index, "generation", 0)
+
+    def __len__(self) -> int:
+        if self.layout == "streaming":
+            return self.index.n_live
+        if self.layout == "sharded":
+            return int(self.index.shard_rows.sum())
+        return int(self.index.x.shape[0])
+
+    # -- planning ---------------------------------------------------------
+
+    def _effective_layout(self, plan: QueryPlan) -> str:
+        """The physical datapath a plan selects: a shard count on a static
+        index routes through the sharded subsystem; a streaming index stays
+        streaming (``shards`` there searches a static snapshot, but the
+        capability constraint is the streaming front's)."""
+        if self.layout != "static":
+            return self.layout
+        return "sharded" if plan.shards is not None else "static"
+
+    def validate(self, plan: QueryPlan | None = None) -> QueryPlan:
+        """Resolve ``plan`` against the index config and validate the
+        (front, backend, layout) combination against the capability
+        registry.  Returns the resolved plan; raises ``PlanError`` on any
+        unsupported combination or unknown name — this is the plan-time
+        choke point, nothing below it re-checks."""
+        p = (plan or QueryPlan()).resolve(self.config)
+        layout = self._effective_layout(p)
+        registry.validate_combo(p.front, p.backend, layout)
+        if self.layout == "streaming" and p.shards is not None:
+            # the snapshot behind shards=S runs the sharded datapath too
+            registry.validate_combo(p.front, p.backend, "sharded")
+        if p.mode == "baseline":
+            if layout != "static":
+                raise PlanError(
+                    f"unsupported plan: mode 'baseline' cannot run on the "
+                    f"{layout!r} index layout — the no-refinement baseline "
+                    f"supports layouts [static] only")
+        elif p.mode != "fatrq":
+            raise PlanError(f"unknown search mode {p.mode!r}; expected "
+                            f"'fatrq' or 'baseline'")
+        if self.layout == "sharded" and \
+                p.shards not in (None, self.index.n_shards):
+            raise PlanError(
+                f"plan asks for {p.shards} shards but the wrapped "
+                f"ShardedIndex is partitioned {self.index.n_shards} ways — "
+                f"re-partition the base index instead")
+        return p
+
+    # -- compilation ------------------------------------------------------
+
+    def executor_for(self, plan: QueryPlan, *, mesh=None):
+        """Validate + compile ``plan`` into its executor (cached per
+        ``(generation, resolved plan, mesh)``).  Returns the executor; the
+        global-id postmap (streaming layouts) stays internal."""
+        rp = self.validate(plan)
+        return self._compile(rp, mesh)[0]
+
+    def _compile(self, rp: QueryPlan, mesh=None) -> tuple:
+        """Resolved+validated plan → (executor, gid postmap | None).
+
+        Underlying factories (``make_executor`` / ``make_sharded_executor``
+        / ``StreamingIndex._executor``) memoize on the index, so stale-
+        generation pruning here never redoes partitioning or stage builds
+        that are still current."""
+        gen = self.generation
+        key = (gen, rp, mesh)
+        hit = self._compiled.get(key)
+        if hit is not None:
+            return hit
+        # prune executors compiled against superseded generations (their
+        # fronts pin replaced device arrays)
+        self._compiled = {kk: v for kk, v in self._compiled.items()
+                          if kk[0] == gen}
+
+        if self.layout == "streaming":
+            st: StreamingIndex = self.index
+            if rp.shards is not None:
+                idx, gid = st.rebuild_static()
+                ex = make_sharded_executor(
+                    idx, shards=rp.shards, backend=rp.backend,
+                    micro_batch=rp.micro_batch,
+                    refine_budget=rp.refine_budget, mesh=mesh)
+                entry = (ex, jnp.asarray(gid))
+            else:
+                dev = st._dev()
+                ex = st._executor(rp.backend, rp.micro_batch, dev,
+                                  refine_budget=rp.refine_budget)
+                entry = (ex, dev["row_gid"])
+        elif self.layout == "sharded":
+            ex = ShardedExecutor(sharded=self.index, backend=rp.backend,
+                                 micro_batch=rp.micro_batch,
+                                 refine_budget=rp.refine_budget)
+            entry = (ex, None)
+        elif rp.shards is not None:
+            ex = make_sharded_executor(
+                self.index, shards=rp.shards, backend=rp.backend,
+                micro_batch=rp.micro_batch, refine_budget=rp.refine_budget,
+                mesh=mesh)
+            entry = (ex, None)
+        else:
+            ex = make_executor(self.index, front=rp.front,
+                               backend=rp.backend,
+                               micro_batch=rp.micro_batch,
+                               refine_budget=rp.refine_budget)
+            entry = (ex, None)
+        self._compiled[key] = entry
+        return entry
+
+    # -- querying ---------------------------------------------------------
+
+    def query(self, queries: jax.Array, *, plan: QueryPlan | None = None,
+              k: int | None = None, micro_batch: int | None = None,
+              cost: QueryCost | None = None, mesh=None) -> SearchResult:
+        """Planned search → ``SearchResult``.
+
+        ``k`` and ``micro_batch`` are per-call overrides of the plan (a
+        serving layer keeps one plan and varies k / batching per request).
+        A ``k`` override re-derives the SSD refine budget unless the
+        plan's budget was pinned independently of its own k — otherwise
+        reusing an already-resolved plan (e.g. ``result.plan``) with a
+        larger k would silently keep the budget resolved for the OLD k
+        and starve the rerank.  ``cost`` merges the call's traffic into
+        an existing ledger, exactly like the executor surfaces it shims.
+        """
+        p = plan or QueryPlan()
+        if k is not None:
+            stale = p.k is not None and k != p.k and \
+                p.refine_budget == search_budget(self.config, p.k)
+            p = dataclasses.replace(
+                p, k=k, refine_budget=None if stale else p.refine_budget)
+        if micro_batch is not None:
+            p = dataclasses.replace(p, micro_batch=micro_batch)
+        rp = self.validate(p)
+        ex, gid_map = self._compile(rp, mesh)
+        if rp.mode == "baseline":
+            ids, dists, out_cost = ex.execute_baseline(queries, k=rp.k)
+            if cost is not None:
+                out_cost = cost.merge(out_cost)
+        else:
+            ids, dists, out_cost = ex.execute(queries, k=rp.k, cost=cost)
+        if gid_map is not None:
+            ids = gid_map[ids]
+        return SearchResult(ids=ids, distances=dists, cost=out_cost,
+                            plan=rp)

@@ -22,15 +22,19 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.anns import stages as stages_mod
-from repro.anns.stages import (Counters, FrontStage, GraphFrontStage,
-                               IVFFrontStage, PallasRefineBackend,
-                               RefineBackend, ReferenceRefineBackend)
+from repro.anns import registry, stages as stages_mod
+from repro.anns.stages import (Counters, FrontStage, RefineBackend,
+                               graph_for as _graph_for)  # noqa: F401 - compat
 from repro.index import graph as graph_mod
 from repro.memory import QueryCost, Tier
 
-FRONT_STAGES = ("ivf", "graph")
-REFINE_BACKENDS = ("reference", "pallas")
+# import-time snapshots of the capability registry, kept as module
+# constants for pre-registry callers (stages.py has registered the
+# built-ins by this point).  Stages registered later are visible only via
+# anns.registry.front_names()/backend_names() — consult those for the
+# live set.
+FRONT_STAGES = registry.front_names()
+REFINE_BACKENDS = registry.backend_names()
 
 # measured scale of ADC + ternary adds per candidate (see benchmarks)
 _COMPUTE_S_PER_CAND = 1e-7
@@ -42,12 +46,13 @@ def _accumulate(total: Counters, new: Counters) -> Counters:
     return total
 
 
-def search_budget(config, k: int) -> int:
+def search_budget(config, k: int, override: int | None = None) -> int:
     """SSD rerank budget for a search call: the configured budget, with a
     4k/32 default, floored at k (k results need ≥ k fetches).  Shared by
     the unsharded and sharded executors — their top-k equivalence depends
-    on deriving the SAME budget."""
-    return max(config.refine_budget or max(4 * k, 32), k)
+    on deriving the SAME budget.  ``override`` is a plan-level budget
+    (``QueryPlan.refine_budget``) taking precedence over the config's."""
+    return max(override or config.refine_budget or max(4 * k, 32), k)
 
 
 def iter_chunks(queries: jax.Array, micro_batch: int | None):
@@ -65,6 +70,10 @@ def _collect(counters: Counters) -> dict[str, int]:
             zip(counters, jax.device_get(list(counters.values())))}
 
 
+def _cat(parts: list[jax.Array]) -> jax.Array:
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+
+
 @dataclass
 class SearchExecutor:
     """Batched staged search over a FaTRQIndex."""
@@ -73,6 +82,7 @@ class SearchExecutor:
     front: FrontStage
     backend: RefineBackend
     micro_batch: int | None = None   # queries per device step; None = all
+    refine_budget: int | None = None  # plan-level SSD budget override
 
     # -- construction -----------------------------------------------------
 
@@ -80,76 +90,70 @@ class SearchExecutor:
     def from_index(cls, index, *, front: str = "ivf",
                    backend: str = "reference",
                    micro_batch: int | None = None,
+                   refine_budget: int | None = None,
                    graph_index: graph_mod.GraphIndex | None = None,
                    **front_opts) -> "SearchExecutor":
-        cfg = index.config
-        if front == "ivf":
-            fs = IVFFrontStage(ivf=index.ivf, codebook=index.codebook,
-                               pq_codes=index.pq_codes,
-                               nprobe=front_opts.pop("nprobe", cfg.nprobe))
-            if front_opts:
-                raise TypeError(f"unknown IVF front options: "
-                                f"{sorted(front_opts)}")
-        elif front == "graph":
-            g = graph_index if graph_index is not None else _graph_for(index)
-            fs = GraphFrontStage(graph=g, codebook=index.codebook,
-                                 pq_codes=index.pq_codes, **front_opts)
-        else:
-            raise ValueError(f"unknown front stage {front!r}; "
-                             f"expected one of {FRONT_STAGES}")
-        if backend == "reference":
-            be = ReferenceRefineBackend()
-        elif backend == "pallas":
-            be = PallasRefineBackend()
-        else:
-            raise ValueError(f"unknown refine backend {backend!r}; "
-                             f"expected one of {REFINE_BACKENDS}")
-        return cls(index=index, front=fs, backend=be, micro_batch=micro_batch)
+        if graph_index is not None:
+            front_opts["graph_index"] = graph_index
+        fs = registry.make_front(front, "static", index, **front_opts)
+        be = registry.make_backend(backend)
+        return cls(index=index, front=fs, backend=be,
+                   micro_batch=micro_batch, refine_budget=refine_budget)
 
     # -- search -----------------------------------------------------------
 
     def _chunks(self, queries: jax.Array):
         return iter_chunks(queries, self.micro_batch)
 
-    def search(self, queries: jax.Array, *, k: int | None = None,
-               cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
-        """FaTRQ search: returns (Q, k) ids + the folded traffic ledger."""
+    def execute(self, queries: jax.Array, *, k: int | None = None,
+                cost: QueryCost | None = None
+                ) -> tuple[jax.Array, jax.Array, QueryCost]:
+        """FaTRQ search: (Q, k) ids, (Q, k) exact squared-L2 distances,
+        and the folded traffic ledger."""
         cfg = self.index.config
         k = k or cfg.final_k
-        budget = search_budget(cfg, k)
+        budget = search_budget(cfg, k, self.refine_budget)
 
         topk_parts: list[jax.Array] = []
+        dist_parts: list[jax.Array] = []
         counters: Counters = {}
         for chunk in self._chunks(queries):
             cand = self.front.candidates(chunk)
             refined = self.backend.refine(chunk, cand, self.index.trq,
                                           k=k, bound=cfg.bound, z=cfg.z)
-            topk, n_ssd = stages_mod._rerank_survivors(
+            topk, topk_d, n_ssd = stages_mod._rerank_survivors(
                 self.index.x, chunk, cand.ids, refined.est, refined.alive,
                 k=k, budget=budget)
             topk_parts.append(topk)
+            dist_parts.append(topk_d)
             _accumulate(counters, cand.counters)
             _accumulate(counters, refined.counters)
             _accumulate(counters, {"ssd_fetch": n_ssd})
 
         cost = self._fold(counters, cost)
-        out = topk_parts[0] if len(topk_parts) == 1 else jnp.concatenate(
-            topk_parts, axis=0)
-        return out, cost
+        return _cat(topk_parts), _cat(dist_parts), cost
 
-    def search_baseline(self, queries: jax.Array, *, k: int | None = None
-                        ) -> tuple[jax.Array, QueryCost]:
+    def search(self, queries: jax.Array, *, k: int | None = None,
+               cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
+        """Legacy tuple surface: (Q, k) ids + ledger (no distances)."""
+        ids, _, cost = self.execute(queries, k=k, cost=cost)
+        return ids, cost
+
+    def execute_baseline(self, queries: jax.Array, *, k: int | None = None
+                         ) -> tuple[jax.Array, jax.Array, QueryCost]:
         """SoTA baseline (cuVS/FAISS style): front stage, then exact rerank
         of the FULL candidate list from SSD — no far-memory refinement."""
         cfg = self.index.config
         k = k or cfg.final_k
         topk_parts: list[jax.Array] = []
+        dist_parts: list[jax.Array] = []
         counters: Counters = {}
         for chunk in self._chunks(queries):
             cand = self.front.candidates(chunk)
-            topk, n_valid = stages_mod._rerank_all(
+            topk, topk_d, n_valid = stages_mod._rerank_all(
                 self.index.x, chunk, cand.ids, cand.valid, k=k)
             topk_parts.append(topk)
+            dist_parts.append(topk_d)
             _accumulate(counters, cand.counters)
             _accumulate(counters, {"ssd_fetch": n_valid})
 
@@ -159,9 +163,13 @@ class SearchExecutor:
         self.front.fold_cost(cost, counts, lay)
         cost.record("rerank", Tier.SSD, counts["ssd_fetch"], lay.ssd_bytes)
         cost.add_compute(_COMPUTE_S_PER_CAND * counts["front_cand"])
-        out = topk_parts[0] if len(topk_parts) == 1 else jnp.concatenate(
-            topk_parts, axis=0)
-        return out, cost
+        return _cat(topk_parts), _cat(dist_parts), cost
+
+    def search_baseline(self, queries: jax.Array, *, k: int | None = None
+                        ) -> tuple[jax.Array, QueryCost]:
+        """Legacy tuple surface over ``execute_baseline``."""
+        ids, _, cost = self.execute_baseline(queries, k=k)
+        return ids, cost
 
     # -- cost folding -----------------------------------------------------
 
@@ -216,31 +224,27 @@ def fold_counts(counts: dict[str, int], *, cost: QueryCost | None, config,
     return cost
 
 
-# ------------------------------------------------------- executor registry
+# -------------------------------------------------------- executor caching
 # Caches live ON the index instance (plain attributes), so their lifetime is
 # exactly the index's lifetime — the resulting index↔executor reference
 # cycle is ordinary gc fodder, with no process-global registry to leak.
-
-
-def _graph_for(index, *, degree: int = 16) -> graph_mod.GraphIndex:
-    """Build (once) and cache the kNN graph for an index's database."""
-    g = getattr(index, "_graph_cache", None)
-    if g is None:
-        g = graph_mod.build(index.x, degree=degree)
-        index._graph_cache = g
-    return g
+# (The kNN-graph cache moved to ``stages.graph_for`` with the front
+# factories; ``_graph_for`` stays importable from here.)
 
 
 def make_executor(index, *, front: str = "ivf", backend: str = "reference",
-                  micro_batch: int | None = None, **front_opts
+                  micro_batch: int | None = None,
+                  refine_budget: int | None = None, **front_opts
                   ) -> SearchExecutor:
     """Memoized executor factory — facade entry point.
 
-    Executors are cached per (index, front, backend, micro_batch) so the
-    compatibility wrappers in ``anns.pipeline`` and the serving layer can
-    call this on every request without rebuilding stages.
+    Executors are cached per (index, front, backend, micro_batch,
+    refine_budget) so the compatibility wrappers in ``anns.pipeline`` and
+    the serving layer can call this on every request without rebuilding
+    stages.
     """
-    key = (front, backend, micro_batch, tuple(sorted(front_opts.items())))
+    key = (front, backend, micro_batch, refine_budget,
+           tuple(sorted(front_opts.items())))
     cache = getattr(index, "_executor_cache", None)
     if cache is None:
         cache = {}
@@ -248,6 +252,8 @@ def make_executor(index, *, front: str = "ivf", backend: str = "reference",
     ex = cache.get(key)
     if ex is None:
         ex = SearchExecutor.from_index(index, front=front, backend=backend,
-                                       micro_batch=micro_batch, **front_opts)
+                                       micro_batch=micro_batch,
+                                       refine_budget=refine_budget,
+                                       **front_opts)
         cache[key] = ex
     return ex

@@ -8,13 +8,16 @@ This module keeps the original public API stable:
 
   * ``PipelineConfig`` / ``FaTRQIndex`` / ``build`` — offline index build
     (PQ → IVF → TRQ encode → index-driven calibration, unchanged).
-  * ``search`` — FaTRQ staged search; now accepts ``front=`` ("ivf" |
+  * ``search`` — FaTRQ staged search; accepts ``front=`` ("ivf" |
     "graph") and ``backend=`` ("reference" | "pallas") to select the
     candidate generator and the refinement datapath, defaulting to the
     config's settings.  Both backends produce identical top-k ids; "pallas"
-    runs the fused ``kernels.ternary_refine`` batched kernel.
+    runs the fused ``kernels.ternary_refine`` batched kernel.  Since the
+    query-planning refactor this is a shim over ``anns.api.Database`` —
+    new code should use ``Database.query`` directly, which also returns
+    the exact top-k distances and the resolved ``QueryPlan``.
   * ``baseline_search`` — coarse ADC + full SSD rerank (cuVS/FAISS-style
-    comparison point), also executor-backed.
+    comparison point), also ``Database``-backed.
   * ``recall_at_k`` — evaluation helper.
 
 See ``docs/architecture.md`` for the stage pipeline, backend selection,
@@ -29,7 +32,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.anns.executor import make_executor
 from repro.core import trq as trq_mod
 from repro.core.trq import TRQCodes
 from repro.index import ivf as ivf_mod
@@ -121,53 +123,44 @@ def build(key: jax.Array, x: jax.Array, config: PipelineConfig) -> FaTRQIndex:
 def search(index: FaTRQIndex, queries: jax.Array, *, k: int | None = None,
            cost: QueryCost | None = None, front: str | None = None,
            backend: str | None = None, shards: int | None = None,
-           mesh=None) -> tuple[jax.Array, QueryCost]:
+           micro_batch: int | None = None, mesh=None
+           ) -> tuple[jax.Array, QueryCost]:
     """Batched FaTRQ search; returns (Q, k) ids + the traffic ledger.
 
-    ``front`` / ``backend`` override the config's stage selection for this
-    call (e.g. ``backend="pallas"`` routes refinement through the fused
-    Pallas kernel).  ``shards`` > 1 routes the call through the sharded
-    subsystem (``anns.sharding``): the database is partitioned by whole
-    IVF lists onto a 1-D ``("search",)`` mesh (needs that many devices)
-    and per-shard top-k + cost ledgers are merged — top-k ids are
-    identical to the unsharded path; requires the IVF front.
+    Compatibility shim over ``anns.api``: the kwargs become a ``QueryPlan``
+    and the call routes through ``Database.wrap(index).query`` — one
+    capability-validated dispatch over static / sharded / streaming
+    layouts, with the plan-keyed executor cache behind it.  Use the
+    ``Database`` API directly to also get the exact top-k distances
+    (``SearchResult.distances``) this shim drops.
 
-    ``index`` may also be a ``StreamingIndex`` (``anns.streaming``): the
-    call routes through its generation-aware datapath (base ∪ delta lists,
-    tombstones masked) and returns stable GLOBAL ids; IVF front only.
+    ``front`` / ``backend`` / ``micro_batch`` override the config's stage
+    selection for this call (e.g. ``backend="pallas"`` routes refinement
+    through the fused Pallas kernel).  ``shards`` > 1 routes the call
+    through the sharded subsystem (``anns.sharding``); ``index`` may also
+    be a ``StreamingIndex`` or ``ShardedIndex``.  Unsupported
+    (front, layout) combinations raise ``api.PlanError`` at plan time
+    (e.g. the graph front on sharded or streaming layouts).
     """
-    from repro.anns.streaming import StreamingIndex
-    if isinstance(index, StreamingIndex):
-        if (front or index.config.front) != "ivf":
-            raise ValueError("streaming search supports the IVF front only "
-                             "(delta pages hang off inverted lists)")
-        return index.search(queries, k=k, backend=backend, cost=cost,
-                            shards=shards)
-    cfg = index.config
-    if shards is not None:
-        if (front or cfg.front) != "ivf":
-            raise ValueError("sharded search supports the IVF front only "
-                             "(whole inverted lists are the partition unit)")
-        from repro.anns.sharding import make_sharded_executor
-        sx = make_sharded_executor(index, shards=shards,
-                                   backend=backend or cfg.backend,
-                                   micro_batch=cfg.micro_batch, mesh=mesh)
-        return sx.search(queries, k=k, cost=cost)
-    ex = make_executor(index, front=front or cfg.front,
-                       backend=backend or cfg.backend,
-                       micro_batch=cfg.micro_batch)
-    return ex.search(queries, k=k, cost=cost)
+    from repro.anns.api import Database, QueryPlan
+    res = Database.wrap(index).query(
+        queries,
+        plan=QueryPlan(front=front, backend=backend, shards=shards, k=k,
+                       micro_batch=micro_batch),
+        cost=cost, mesh=mesh)
+    return res.ids, res.cost
 
 
 def baseline_search(index: FaTRQIndex, queries: jax.Array, *,
                     k: int | None = None, front: str | None = None
                     ) -> tuple[jax.Array, QueryCost]:
     """SoTA baseline (cuVS/FAISS style): coarse ADC then rerank the FULL
-    candidate list from SSD — no far-memory refinement."""
-    cfg = index.config
-    ex = make_executor(index, front=front or cfg.front,
-                       backend=cfg.backend, micro_batch=cfg.micro_batch)
-    return ex.search_baseline(queries, k=k)
+    candidate list from SSD — no far-memory refinement.  Shim over
+    ``anns.api`` (``QueryPlan(mode="baseline")``)."""
+    from repro.anns.api import Database, QueryPlan
+    res = Database.wrap(index).query(
+        queries, plan=QueryPlan(front=front, k=k, mode="baseline"))
+    return res.ids, res.cost
 
 
 def recall_at_k(pred: jax.Array, gt: jax.Array, k: int) -> float:

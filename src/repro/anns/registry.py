@@ -1,0 +1,171 @@
+"""Capability registry for the query-planning layer (anns/api.py).
+
+One logical index, many physical layouts: a search request names a *front*
+stage (candidate generation), a *refine backend* (FaTRQ estimation
+datapath), and runs against an index *layout* ("static" ``FaTRQIndex``,
+"sharded" ``ShardedIndex`` on a device mesh, "streaming"
+``StreamingIndex`` with delta lists).  Not every combination exists — the
+graph front has no sharded frontier exchange and no online edge insertion
+yet — and before this layer each entry point re-derived that matrix with
+its own ``isinstance``/string if-chains and a triplicated "IVF front only"
+error string.
+
+Here every front stage and refine backend *declares* what it supports:
+
+* ``register_front(name, layouts=..., make={layout: factory})`` — a front
+  advertises the layouts it can run on and, per layout, a factory
+  ``factory(index, **opts) -> FrontStage`` building the stage object for
+  that physical layout (the sharded layout inlines its front inside the
+  ``shard_map`` body, so it validates against the registry but constructs
+  no stage object).
+* ``register_backend(name, make=cls, layouts=...)`` — refine backends
+  (today both run everywhere).
+* ``add_front_factory(name, layout, factory)`` — a later-imported
+  subsystem plugs its physical variant into an existing front (e.g.
+  ``anns.streaming`` attaches the base ∪ delta IVF front).
+
+``validate_combo`` is the single choke point: every unsupported pair
+raises ``PlanError`` *at plan time* with a message naming the (front,
+layout) pair, instead of a mid-search ``ValueError`` from whichever copy
+of the dispatch ladder happened to notice first.  A new front×layout
+combination (ROADMAP: graph-front sharding) becomes a registry entry, not
+a fourth copy of the ladder.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+LAYOUTS = ("static", "sharded", "streaming")
+
+
+class PlanError(ValueError):
+    """A QueryPlan names an unsupported (front, backend, layout)
+    combination — raised at plan-validation time, never mid-search.
+    Subclasses ``ValueError`` so pre-registry callers catching the old
+    ad-hoc errors keep working."""
+
+
+@dataclass
+class FrontSpec:
+    """A registered front stage: supported layouts + per-layout factory."""
+
+    name: str
+    layouts: tuple[str, ...]
+    factories: dict[str, Callable] = field(default_factory=dict)
+
+
+@dataclass
+class BackendSpec:
+    """A registered refine backend: supported layouts + constructor."""
+
+    name: str
+    layouts: tuple[str, ...]
+    make: Callable = None
+
+
+_FRONTS: dict[str, FrontSpec] = {}
+_BACKENDS: dict[str, BackendSpec] = {}
+
+
+def register_front(name: str, *, layouts: tuple[str, ...],
+                   make: dict[str, Callable] | None = None) -> None:
+    """Declare a front stage and the index layouts it supports."""
+    for lay in layouts:
+        if lay not in LAYOUTS:
+            raise ValueError(f"unknown layout {lay!r}; expected one of "
+                             f"{LAYOUTS}")
+    _FRONTS[name] = FrontSpec(name=name, layouts=tuple(layouts),
+                              factories=dict(make or {}))
+
+
+def register_backend(name: str, *, make: Callable,
+                     layouts: tuple[str, ...] = LAYOUTS) -> None:
+    """Declare a refine backend and the index layouts it supports."""
+    _BACKENDS[name] = BackendSpec(name=name, layouts=tuple(layouts),
+                                  make=make)
+
+
+def add_front_factory(name: str, layout: str, factory: Callable) -> None:
+    """Attach a physical-layout factory to an already-registered front
+    (used by later-imported subsystems, e.g. the streaming IVF front)."""
+    spec = front_spec(name)
+    if layout not in spec.layouts:
+        raise ValueError(f"front {name!r} does not declare layout "
+                         f"{layout!r} (declared: {spec.layouts})")
+    spec.factories[layout] = factory
+
+
+def front_names() -> tuple[str, ...]:
+    return tuple(_FRONTS)
+
+
+def backend_names() -> tuple[str, ...]:
+    return tuple(_BACKENDS)
+
+
+def front_spec(name: str) -> FrontSpec:
+    try:
+        return _FRONTS[name]
+    except KeyError:
+        raise PlanError(f"unknown front stage {name!r}; expected one of "
+                        f"{tuple(_FRONTS)}") from None
+
+
+def backend_spec(name: str) -> BackendSpec:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise PlanError(f"unknown refine backend {name!r}; expected one of "
+                        f"{tuple(_BACKENDS)}") from None
+
+
+def _pair_error(kind: str, name: str, supported: tuple[str, ...],
+                layout: str) -> PlanError:
+    """The capability-violation error, naming the unsupported pair and
+    what WOULD work on each side of it (same-kind alternatives: a backend
+    violation lists the backends the layout supports, not fronts)."""
+    pool = _FRONTS if kind == "front" else _BACKENDS
+    alts = sorted(n for n, s in pool.items() if layout in s.layouts)
+    alt = "/".join(alts).upper() or "NO registered"
+    return PlanError(
+        f"unsupported plan: {kind} {name!r} cannot run on the {layout!r} "
+        f"index layout — {kind} {name!r} supports layouts "
+        f"[{', '.join(supported)}]; the {layout!r} layout supports the "
+        f"{alt} {kind} only ({kind}s: {alts})")
+
+
+def validate_combo(front: str, backend: str, layout: str) -> None:
+    """Raise ``PlanError`` unless (front, backend) both support ``layout``.
+    Unknown names raise too — validation happens once, at plan time."""
+    if layout not in LAYOUTS:
+        raise PlanError(f"unknown index layout {layout!r}; expected one of "
+                        f"{LAYOUTS}")
+    fs = front_spec(front)
+    if layout not in fs.layouts:
+        raise _pair_error("front", front, fs.layouts, layout)
+    bs = backend_spec(backend)
+    if layout not in bs.layouts:
+        raise _pair_error("backend", backend, bs.layouts, layout)
+
+
+def make_front(name: str, layout: str, index, **opts):
+    """Build the front-stage object for (front, layout) via its registered
+    factory.  The sharded layout registers no factory (its front is inlined
+    in the shard_map body) — asking for one is a wiring bug, not a plan
+    error."""
+    spec = front_spec(name)
+    if layout not in spec.layouts:
+        raise _pair_error("front", name, spec.layouts, layout)
+    factory = spec.factories.get(layout)
+    if factory is None:
+        raise KeyError(f"front {name!r} has no stage factory for layout "
+                       f"{layout!r} (registered: "
+                       f"{sorted(spec.factories)})")
+    return factory(index, **opts)
+
+
+def make_backend(name: str, **opts):
+    """Build a refine-backend object via its registered constructor."""
+    return backend_spec(name).make(**opts)

@@ -51,10 +51,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.anns.executor import (REFINE_BACKENDS, _accumulate, fold_counts,
+from repro.anns import registry
+from repro.anns.executor import (_accumulate, _cat, fold_counts,
                                  iter_chunks, search_budget)
-from repro.anns.stages import (Candidates, Counters, PallasRefineBackend,
-                               ReferenceRefineBackend, adc_score,
+from repro.anns.stages import (Candidates, Counters, adc_score,
                                fold_ivf_front_cost, rank_centroid_lists)
 from repro.compat import shard_map
 from repro.core.decomposition import RecordScalars
@@ -282,14 +282,8 @@ def _shard_body(queries, centroids, codebook, model, db, *, dim: int,
     cand = Candidates(ids=ids, valid=valid, d0=d0,
                       counters={"front_cand": jnp.sum(valid)})
 
-    # -- refine: existing backends, thresholds pooled across the axis -----
-    if backend == "reference":
-        be = ReferenceRefineBackend()
-    elif backend == "pallas":
-        be = PallasRefineBackend()
-    else:
-        raise ValueError(f"unknown refine backend {backend!r}; "
-                         f"expected one of {REFINE_BACKENDS}")
+    # -- refine: registered backends, thresholds pooled across the axis ---
+    be = registry.make_backend(backend)
     refined = be.refine(queries, cand, trq, k=k, bound=bound, z=z,
                         axis_name=AXIS)
 
@@ -299,15 +293,16 @@ def _shard_body(queries, centroids, codebook, model, db, *, dim: int,
         k=k, budget=budget, axis_name=AXIS)
     d_all = jax.lax.all_gather(d, AXIS, axis=1, tiled=True)
     g_all = jax.lax.all_gather(fetch_gid, AXIS, axis=1, tiled=True)
-    _, best = jax.lax.top_k(-d_all, k)
+    neg_d, best = jax.lax.top_k(-d_all, k)
     topk = jnp.take_along_axis(g_all, best, axis=1)           # replicated
+    topk_d = -neg_d                                           # replicated
 
     counters = dict(cand.counters)
     counters.update(refined.counters)
     counters["ssd_fetch"] = n_ssd
     counters = {n: v.reshape(1).astype(jnp.int32)
                 for n, v in counters.items()}                 # (1,) → (S,)
-    return topk, counters
+    return topk, topk_d, counters
 
 
 @partial(jax.jit, static_argnames=("mesh", "dim", "nprobe", "k", "budget",
@@ -319,7 +314,7 @@ def _sharded_search(mesh, queries, centroids, codebook, trq_model, db, *,
                    bound=bound, z=z, backend=backend)
     fn = shard_map(body, mesh=mesh,
                    in_specs=(P(), P(), P(), P(), P(AXIS)),
-                   out_specs=(P(), P(AXIS)),
+                   out_specs=(P(), P(), P(AXIS)),
                    check_rep=False)
     return fn(queries, centroids, codebook, trq_model, db)
 
@@ -339,54 +334,62 @@ class ShardedExecutor:
     sharded: ShardedIndex
     backend: str = "reference"
     micro_batch: int | None = None
+    refine_budget: int | None = None  # plan-level SSD budget override
 
     def __post_init__(self):
-        if self.backend not in REFINE_BACKENDS:
-            raise ValueError(f"unknown refine backend {self.backend!r}; "
-                             f"expected one of {REFINE_BACKENDS}")
+        registry.backend_spec(self.backend)   # PlanError on unknown names
 
     # -- construction -----------------------------------------------------
 
     @classmethod
     def from_index(cls, index, *, shards: int, backend: str = "reference",
-                   mesh=None, micro_batch: int | None = None
-                   ) -> "ShardedExecutor":
+                   mesh=None, micro_batch: int | None = None,
+                   refine_budget: int | None = None) -> "ShardedExecutor":
         """Partition ``index`` into ``shards`` and place it on ``mesh``
         (default: a fresh ``("search",)`` mesh over the first S devices)."""
         if mesh is None:
             from repro.launch.mesh import make_search_mesh
             mesh = make_search_mesh(shards)
         si = partition_database(index, shards).place(mesh)
-        return cls(sharded=si, backend=backend, micro_batch=micro_batch)
+        return cls(sharded=si, backend=backend, micro_batch=micro_batch,
+                   refine_budget=refine_budget)
 
     # -- search -----------------------------------------------------------
 
-    def search(self, queries: jax.Array, *, k: int | None = None,
-               cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
-        """Sharded FaTRQ search: (Q, k) GLOBAL ids + the merged ledger."""
+    def execute(self, queries: jax.Array, *, k: int | None = None,
+                cost: QueryCost | None = None
+                ) -> tuple[jax.Array, jax.Array, QueryCost]:
+        """Sharded FaTRQ search: (Q, k) GLOBAL ids, (Q, k) exact squared-L2
+        distances, and the merged per-shard ledger."""
         si = self.sharded
         cfg = si.config
         k = k or cfg.final_k
-        budget = search_budget(cfg, k)
+        budget = search_budget(cfg, k, self.refine_budget)
         db = (si.list_gid, si.lists, si.pq_codes, si.trq.levels,
               si.trq.scalars, si.x, si.gid)
 
         topk_parts: list[jax.Array] = []
+        dist_parts: list[jax.Array] = []
         counters: Counters = {}
         for chunk in iter_chunks(queries, self.micro_batch):
-            topk, cnt = _sharded_search(
+            topk, topk_d, cnt = _sharded_search(
                 si.mesh, chunk, si.centroids, si.codebook, si.trq.model, db,
                 dim=si.trq.dim, nprobe=cfg.nprobe, k=k, budget=budget,
                 bound=cfg.bound, z=cfg.z, backend=self.backend)
             topk_parts.append(topk)
+            dist_parts.append(topk_d)
             _accumulate(counters, cnt)
 
         merged = self._fold(counters)
         if cost is not None:
             merged = cost.merge(merged)
-        out = topk_parts[0] if len(topk_parts) == 1 else jnp.concatenate(
-            topk_parts, axis=0)
-        return out, merged
+        return _cat(topk_parts), _cat(dist_parts), merged
+
+    def search(self, queries: jax.Array, *, k: int | None = None,
+               cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
+        """Legacy tuple surface: (Q, k) GLOBAL ids + the merged ledger."""
+        ids, _, merged = self.execute(queries, k=k, cost=cost)
+        return ids, merged
 
     # -- cost folding -----------------------------------------------------
 
@@ -410,15 +413,16 @@ class ShardedExecutor:
 
 
 def make_sharded_executor(index, *, shards: int, backend: str = "reference",
-                          micro_batch: int | None = None, mesh=None
+                          micro_batch: int | None = None,
+                          refine_budget: int | None = None, mesh=None
                           ) -> ShardedExecutor:
     """Memoized sharded-executor factory (facade entry point).
 
     Partitioning + placement run once per (index, shards); executors are
-    additionally cached per (backend, micro_batch) so ``anns.pipeline`` and
-    ``serving`` can call this on every request.
+    additionally cached per (backend, micro_batch, refine_budget) so
+    ``anns.pipeline`` and ``serving`` can call this on every request.
     """
-    key = (shards, backend, micro_batch, mesh)
+    key = (shards, backend, micro_batch, refine_budget, mesh)
     cache = getattr(index, "_sharded_cache", None)
     if cache is None:
         cache = {}
@@ -429,16 +433,18 @@ def make_sharded_executor(index, *, shards: int, backend: str = "reference",
         # share the partitioned+placed index only across entries with the
         # SAME mesh request — a default (mesh=None) call must not silently
         # adopt a custom-mesh placement and vice versa
-        for (sh, _b, _m, _mesh), other in cache.items():
+        for (sh, _b, _m, _rb, _mesh), other in cache.items():
             if sh == shards and _mesh is mesh:
                 si = other.sharded
                 break
         if si is None:
             ex = ShardedExecutor.from_index(index, shards=shards,
                                             backend=backend, mesh=mesh,
-                                            micro_batch=micro_batch)
+                                            micro_batch=micro_batch,
+                                            refine_budget=refine_budget)
         else:
             ex = ShardedExecutor(sharded=si, backend=backend,
-                                 micro_batch=micro_batch)
+                                 micro_batch=micro_batch,
+                                 refine_budget=refine_budget)
         cache[key] = ex
     return ex

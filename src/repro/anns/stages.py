@@ -36,6 +36,7 @@ from typing import NamedTuple, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
+from repro.anns import registry
 from repro.core import trq as trq_mod
 from repro.core.estimator import pooled_k_smallest
 from repro.core.packing import unpack_ternary
@@ -353,22 +354,66 @@ class PallasRefineBackend:
 @partial(jax.jit, static_argnames=("k", "budget"))
 def _rerank_survivors(x, queries, ids, est, alive, *, k: int, budget: int):
     """Batched exact rerank: top-`budget` survivors by estimate fetch full
-    vectors, exact L2, top-k.  Returns (topk_ids, n_ssd)."""
+    vectors, exact L2, top-k.  Returns (topk_ids, topk_dists, n_ssd) —
+    distances are the exact squared L2 of each returned id (+inf on padded
+    slots when fewer than k candidates survived)."""
     est_m = jnp.where(alive, est, jnp.inf)
     _, order = jax.lax.top_k(-est_m, budget)                  # (Q, budget)
     fetch_ids = jnp.take_along_axis(ids, order, axis=1)
     fetch_alive = jnp.take_along_axis(alive, order, axis=1)
     d = jnp.sum((x[fetch_ids] - queries[:, None, :]) ** 2, axis=-1)
     d = jnp.where(fetch_alive, d, jnp.inf)
-    _, best = jax.lax.top_k(-d, k)
+    neg_d, best = jax.lax.top_k(-d, k)
     topk = jnp.take_along_axis(fetch_ids, best, axis=1)
-    return topk, jnp.sum(fetch_alive)
+    return topk, -neg_d, jnp.sum(fetch_alive)
 
 
 @partial(jax.jit, static_argnames=("k",))
 def _rerank_all(x, queries, ids, valid, *, k: int):
-    """Baseline rerank: exact L2 over the whole candidate list (no refine)."""
+    """Baseline rerank: exact L2 over the whole candidate list (no refine).
+    Returns (topk_ids, topk_dists, n_valid)."""
     d = jnp.sum((x[ids] - queries[:, None, :]) ** 2, axis=-1)
     d = jnp.where(valid, d, jnp.inf)
-    _, best = jax.lax.top_k(-d, k)
-    return jnp.take_along_axis(ids, best, axis=1), jnp.sum(valid)
+    neg_d, best = jax.lax.top_k(-d, k)
+    return jnp.take_along_axis(ids, best, axis=1), -neg_d, jnp.sum(valid)
+
+
+# ----------------------------------------------- front factories + registry
+# Each front registers itself with the capability registry: supported index
+# layouts plus a per-layout stage factory.  ``anns.streaming`` attaches the
+# "streaming" factory for the IVF front when it is imported; the "sharded"
+# layout inlines its front in the shard_map body (``anns.sharding``), so it
+# is declared (capability-validated) but has no stage factory here.
+
+
+def graph_for(index, *, degree: int = 16) -> graph_mod.GraphIndex:
+    """Build (once) and cache the kNN graph for an index's database.
+    The cache lives ON the index instance, so its lifetime is exactly the
+    index's lifetime — no process-global registry to leak."""
+    g = getattr(index, "_graph_cache", None)
+    if g is None:
+        g = graph_mod.build(index.x, degree=degree)
+        index._graph_cache = g
+    return g
+
+
+def make_ivf_front(index, **opts) -> IVFFrontStage:
+    nprobe = opts.pop("nprobe", index.config.nprobe)
+    if opts:
+        raise TypeError(f"unknown IVF front options: {sorted(opts)}")
+    return IVFFrontStage(ivf=index.ivf, codebook=index.codebook,
+                         pq_codes=index.pq_codes, nprobe=nprobe)
+
+
+def make_graph_front(index, *, graph_index=None, **opts) -> GraphFrontStage:
+    g = graph_index if graph_index is not None else graph_for(index)
+    return GraphFrontStage(graph=g, codebook=index.codebook,
+                           pq_codes=index.pq_codes, **opts)
+
+
+registry.register_front("ivf", layouts=("static", "sharded", "streaming"),
+                        make={"static": make_ivf_front})
+registry.register_front("graph", layouts=("static",),
+                        make={"static": make_graph_front})
+registry.register_backend("reference", make=ReferenceRefineBackend)
+registry.register_backend("pallas", make=PallasRefineBackend)

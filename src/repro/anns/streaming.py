@@ -61,12 +61,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.anns import registry
 from repro.anns.executor import SearchExecutor
 from repro.anns.pipeline import FaTRQIndex, PipelineConfig
 from repro.anns.sharding import lpt_assign
-from repro.anns.stages import (Candidates, PallasRefineBackend,
-                               ReferenceRefineBackend, adc_score,
-                               fold_ivf_front_cost, rank_centroid_lists)
+from repro.anns.stages import (Candidates, adc_score, fold_ivf_front_cost,
+                               rank_centroid_lists)
 from repro.core import trq as trq_mod
 from repro.index import ivf as ivf_mod
 from repro.memory import QueryCost
@@ -503,11 +503,13 @@ class StreamingIndex:
             }
         return self._dev_cache
 
-    def search(self, queries: jax.Array, *, k: int | None = None,
-               backend: str | None = None, micro_batch: int | None = None,
-               cost: QueryCost | None = None, shards: int | None = None
-               ) -> tuple[jax.Array, QueryCost]:
-        """Generation-aware FaTRQ search → (Q, k) GLOBAL ids + ledger.
+    def execute(self, queries: jax.Array, *, k: int | None = None,
+                backend: str | None = None, micro_batch: int | None = None,
+                refine_budget: int | None = None,
+                cost: QueryCost | None = None, shards: int | None = None
+                ) -> tuple[jax.Array, jax.Array, QueryCost]:
+        """Generation-aware FaTRQ search → (Q, k) GLOBAL ids, (Q, k) exact
+        squared-L2 distances, and the traffic ledger.
 
         The IVF front probes base ∪ delta lists and masks tombstones; both
         refine backends score base and delta rows under one QueryCost
@@ -525,42 +527,67 @@ class StreamingIndex:
             from repro.anns.sharding import make_sharded_executor
             idx, gid = self.rebuild_static()
             sx = make_sharded_executor(idx, shards=shards, backend=backend,
-                                       micro_batch=micro_batch)
-            ids, scost = sx.search(queries, k=k, cost=cost)
-            return jnp.asarray(gid)[ids], scost
+                                       micro_batch=micro_batch,
+                                       refine_budget=refine_budget)
+            ids, dists, scost = sx.execute(queries, k=k, cost=cost)
+            return jnp.asarray(gid)[ids], dists, scost
 
         dev = self._dev()
-        ex = self._executor(backend, micro_batch, dev)
-        rows, out_cost = ex.search(queries, k=k, cost=cost)
-        return dev["row_gid"][rows], out_cost
+        ex = self._executor(backend, micro_batch, dev,
+                            refine_budget=refine_budget)
+        rows, dists, out_cost = ex.execute(queries, k=k, cost=cost)
+        return dev["row_gid"][rows], dists, out_cost
 
-    def _executor(self, backend: str, micro_batch: int | None,
-                  dev: dict) -> SearchExecutor:
+    def search(self, queries: jax.Array, *, k: int | None = None,
+               backend: str | None = None, micro_batch: int | None = None,
+               cost: QueryCost | None = None, shards: int | None = None
+               ) -> tuple[jax.Array, QueryCost]:
+        """Legacy tuple surface over ``execute`` (no distances)."""
+        ids, _, out_cost = self.execute(queries, k=k, backend=backend,
+                                        micro_batch=micro_batch, cost=cost,
+                                        shards=shards)
+        return ids, out_cost
+
+    def _executor(self, backend: str, micro_batch: int | None, dev: dict,
+                  refine_budget: int | None = None) -> SearchExecutor:
         """Plain ``SearchExecutor`` over the current generation — the
         streaming front satisfies the ``FrontStage`` protocol and
         ``StreamingIndex`` quacks like a ``FaTRQIndex`` (``config``,
         ``layout``, ``trq``, ``x``), so search/fold logic lives in ONE
-        place.  Cached per (generation, backend, micro_batch)."""
-        key = (dev["gen"], backend, micro_batch)
+        place.  Front and backend come from the capability registry
+        (``anns.registry``); cached per (generation, backend, micro_batch,
+        refine_budget)."""
+        key = (dev["gen"], backend, micro_batch, refine_budget)
         ex = self._ex_cache.get(key)
         if ex is not None:
             return ex
-        if backend == "reference":
-            be = ReferenceRefineBackend()
-        elif backend == "pallas":
-            be = PallasRefineBackend()
-        else:
-            raise ValueError(f"unknown refine backend {backend!r}")
-        fs = StreamingFrontStage(
-            centroids=self.centroids, codebook=self.codebook,
-            pq_codes=self.pq_codes, base_lists=dev["base_lists"],
-            delta_lists=dev["delta_lists"], alive=dev["alive"],
-            nprobe=self.config.nprobe)
+        be = registry.make_backend(backend)
+        fs = registry.make_front("ivf", "streaming", self)
         ex = SearchExecutor(index=self, front=fs, backend=be,
-                            micro_batch=micro_batch)
+                            micro_batch=micro_batch,
+                            refine_budget=refine_budget)
         # keep only the current generation's executors (stale fronts hold
         # references to superseded device arrays)
         self._ex_cache = {kk: v for kk, v in self._ex_cache.items()
                           if kk[0] == dev["gen"]}
         self._ex_cache[key] = ex
         return ex
+
+
+# ----------------------------------------------------- registry integration
+# The IVF front declares streaming support in ``anns.stages``; the factory
+# building its base ∪ delta physical variant lives here, next to the stage.
+
+
+def make_streaming_front(st: StreamingIndex, **opts) -> StreamingFrontStage:
+    nprobe = opts.pop("nprobe", st.config.nprobe)
+    if opts:
+        raise TypeError(f"unknown streaming front options: {sorted(opts)}")
+    dev = st._dev()
+    return StreamingFrontStage(
+        centroids=st.centroids, codebook=st.codebook, pq_codes=st.pq_codes,
+        base_lists=dev["base_lists"], delta_lists=dev["delta_lists"],
+        alive=dev["alive"], nprobe=nprobe)
+
+
+registry.add_front_factory("ivf", "streaming", make_streaming_front)

@@ -1,3 +1,8 @@
 from repro.serving.engine import Engine, Retriever, rag_answer
 
 __all__ = ["Engine", "Retriever", "rag_answer"]
+
+# re-exported for serving callers building plans (canonical home: repro.anns)
+from repro.anns.api import Database, QueryPlan, SearchResult  # noqa: E402,F401
+
+__all__ += ["Database", "QueryPlan", "SearchResult"]

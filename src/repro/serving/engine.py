@@ -12,12 +12,13 @@ stage, refinement backend, micro-batch size) and keeps a running ledger.
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
 
-from repro.anns.executor import make_executor
+from repro.anns.api import Database, QueryPlan, SearchResult
 from repro.anns.pipeline import FaTRQIndex
 from repro.memory import QueryCost
 from repro.models.model_zoo import ModelApi
@@ -63,71 +64,90 @@ class Engine:
 
 @dataclass
 class Retriever:
-    """Serving-side wrapper: staged executor + micro-batching + ledger.
+    """Serving-side wrapper over the ``anns.api.Database`` handle: one
+    default ``QueryPlan`` + a running traffic ledger.
 
     ``total_cost`` accumulates traffic across requests (capacity-planning
     view); each ``retrieve`` also returns the per-call QueryCost.
 
-    ``shards`` > 1 selects the sharded datapath (``anns.sharding``): the
-    database is partitioned across a ``("search",)`` device mesh and each
-    retrieval's per-shard ledgers arrive pre-folded under the
-    parallel-shard model (max time across shards, summed bytes);
-    ``total_cost`` then accumulates those calls serially as usual.
-    Requires the IVF front and ``shards`` visible devices.
+    The per-field knobs (``front``/``backend``/``micro_batch``/``shards``)
+    are the legacy surface and become the default plan; pass ``plan=`` to
+    override them wholesale.  The plan is validated once against the
+    capability registry (unsupported combinations — e.g. the graph front
+    on a sharded or streaming index — raise ``anns.PlanError`` at plan
+    time) and compiled once into an executor cached per (index
+    generation, plan): repeated ``retrieve`` calls reuse it, and a
+    ``StreamingIndex``'s ``insert``/``delete``/``compact``/``rebalance``
+    generation bumps invalidate it, including the sharded snapshot behind
+    ``shards=S``.
 
-    ``index`` may also be a ``StreamingIndex`` (``anns.streaming``): live
-    traffic keeps retrieving between ``insert``/``delete`` calls through
-    its generation-aware datapath (IVF front only), ids stay stable global
-    ids across compactions, and delta-list traffic lands on the running
-    ledger's distinct ``delta:cxl`` entry.
+    ``index`` may be a ``FaTRQIndex``, ``ShardedIndex`` or
+    ``StreamingIndex`` (or a ready ``Database``): streaming retrieval
+    returns stable global ids across compactions and bills delta-list
+    traffic to the running ledger's distinct ``delta:cxl`` entry; sharded
+    retrieval arrives pre-folded under the parallel-shard model (max time
+    across shards, summed bytes).
     """
 
-    index: "FaTRQIndex | StreamingIndex"    # noqa: F821
+    index: "FaTRQIndex | StreamingIndex | Database"    # noqa: F821
     front: str = "ivf"
     backend: str = "reference"
     micro_batch: int | None = 8
     shards: int | None = None
+    plan: QueryPlan | None = None
     total_cost: QueryCost = field(default_factory=QueryCost)
 
-    def retrieve(self, queries: jax.Array, *, k: int
+    @property
+    def db(self) -> Database:
+        return Database.wrap(self.index)
+
+    def default_plan(self) -> QueryPlan:
+        if self.plan is not None:
+            return self.plan
+        return QueryPlan(front=self.front, backend=self.backend,
+                         shards=self.shards, micro_batch=self.micro_batch)
+
+    def retrieve(self, queries: jax.Array, *, k: int,
+                 micro_batch: int | None = None
                  ) -> tuple[jax.Array, QueryCost]:
-        from repro.anns.streaming import StreamingIndex
-        if isinstance(self.index, StreamingIndex):
-            if self.front != "ivf":
-                raise ValueError("streaming retrieval supports front='ivf' "
-                                 "only")
-            ids, cost = self.index.search(queries, k=k,
-                                          backend=self.backend,
-                                          micro_batch=self.micro_batch,
-                                          shards=self.shards)
-            self.total_cost.merge(cost)
-            return ids, cost
-        if self.shards is not None:
-            if self.front != "ivf":
-                raise ValueError("sharded retrieval supports front='ivf' "
-                                 "only")
-            from repro.anns.sharding import make_sharded_executor
-            ex = make_sharded_executor(self.index, shards=self.shards,
-                                       backend=self.backend,
-                                       micro_batch=self.micro_batch)
-        else:
-            ex = make_executor(self.index, front=self.front,
-                               backend=self.backend,
-                               micro_batch=self.micro_batch)
-        ids, cost = ex.search(queries, k=k)
-        self.total_cost.merge(cost)
-        return ids, cost
+        """Legacy tuple surface: (Q, k) ids + per-call ledger.
+        ``micro_batch`` overrides the plan's batching for this call."""
+        res = self.query(queries, k=k, micro_batch=micro_batch)
+        return res.ids, res.cost
+
+    def query(self, queries: jax.Array, *, k: int,
+              micro_batch: int | None = None) -> SearchResult:
+        """Planned retrieval → ``SearchResult`` (ids, exact distances,
+        ledger, resolved plan); folds the call into ``total_cost``."""
+        res = self.db.query(queries, plan=self.default_plan(), k=k,
+                            micro_batch=micro_batch)
+        self.total_cost.merge(res.cost)
+        return res
 
 
 def rag_answer(engine: Engine, index: FaTRQIndex, embed_fn, prompt_tokens,
                *, k: int = 5, decode_steps: int = 8,
-               retriever: Retriever | None = None, micro_batch: int = 8):
+               retriever: Retriever | None = None, micro_batch: int = 8,
+               plan: QueryPlan | None = None):
     """One RAG round-trip: embed the prompt, FaTRQ-retrieve top-k context
-    ids through the staged executor (micro-batched), prepend them (stub
-    tokenization: ids mod vocab), decode."""
+    ids through the planned ``Database`` datapath (micro-batched), prepend
+    them (stub tokenization: ids mod vocab), decode.
+
+    ``plan`` threads the caller's full ``QueryPlan`` (shards, backend,
+    refine budget, ...) into the default retriever — previously a default
+    ``Retriever`` was constructed that silently ignored any such
+    configuration.  Pass ``retriever`` instead to keep a running ledger
+    across calls (mutually exclusive with ``plan``; configure the
+    retriever's plan at construction)."""
     q = embed_fn(prompt_tokens)                       # (B, D) embeddings
     if retriever is None:
-        retriever = Retriever(index=index, micro_batch=micro_batch)
+        if plan is not None and plan.micro_batch is None:
+            plan = dataclasses.replace(plan, micro_batch=micro_batch)
+        retriever = Retriever(index=index, micro_batch=micro_batch,
+                              plan=plan)
+    elif plan is not None:
+        raise ValueError("pass plan= or retriever=, not both — a "
+                         "Retriever carries its own plan")
     ids, cost = retriever.retrieve(q, k=k)
     engine.stats.retrievals += q.shape[0]
     # stub contextualization: retrieved ids become context tokens

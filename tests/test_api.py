@@ -1,0 +1,339 @@
+"""Unified Database / QueryPlan API tests.
+
+Covers the PR-5 acceptance matrix: plan validation (every front × backend
+× {static, sharded, streaming} either resolves or raises ``PlanError`` at
+plan time), shim equivalence (``pipeline.search`` / ``baseline_search`` /
+``Retriever.retrieve`` return bit-identical ids and per-tier ledger bytes
+to ``Database.query`` on both refine backends), ``SearchResult`` distance
+correctness vs brute force on the returned top-k, and the plan-keyed
+executor cache with streaming-generation invalidation across
+``compact()`` / ``rebalance()``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.anns import (Database, PipelineConfig, PlanError, QueryPlan,
+                        StreamingConfig, StreamingIndex, baseline_search,
+                        build, partition_database, search)
+from repro.anns.executor import FRONT_STAGES, REFINE_BACKENDS
+from repro.data import make_dataset
+from repro.serving import Retriever
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_dataset(jax.random.PRNGKey(0), n=2500, d=32, n_queries=8,
+                        k_gt=20, clusters=8)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return PipelineConfig(dim=32, pq_m=4, pq_k=32, nlist=16, nprobe=4,
+                          final_k=5, refine_budget=20)
+
+
+@pytest.fixture(scope="module")
+def index(ds, cfg):
+    return build(jax.random.PRNGKey(1), ds.x, cfg)
+
+
+@pytest.fixture(scope="module")
+def streaming(ds, cfg):
+    """A live mutable index: base prefix + inserted tail + tombstones, so
+    the delta-list and tombstone datapaths are exercised.  gid g always
+    maps to ds.x[g] (inserts arrive in dataset order)."""
+    st = StreamingIndex(build(jax.random.PRNGKey(2), ds.x[:2000], cfg),
+                        StreamingConfig(auto_compact=False))
+    st.insert(ds.x[2000:])
+    st.delete(np.arange(100, 200))
+    return st
+
+
+def _ledger_dict(cost):
+    return {k: (t.accesses, t.bytes) for k, t in cost.ledger.items()}
+
+
+def _brute_dists(ds, queries, ids):
+    x = np.asarray(ds.x)
+    q = np.asarray(queries)
+    return np.sum((x[np.asarray(ids)] - q[:, None, :]) ** 2, axis=-1)
+
+
+class TestPlanValidation:
+    def test_full_capability_matrix(self, index, streaming):
+        # every registered front × backend × layout either resolves or
+        # raises PlanError — today "ivf" runs everywhere and "graph" is
+        # static-only (no sharded frontier exchange, no online edges)
+        targets = {"static": (Database.wrap(index), None),
+                   "sharded": (Database.wrap(index), 1),
+                   "streaming": (Database.wrap(streaming), None)}
+        for front in FRONT_STAGES:
+            for backend in REFINE_BACKENDS:
+                for layout, (db, shards) in targets.items():
+                    plan = QueryPlan(front=front, backend=backend,
+                                     shards=shards)
+                    supported = front == "ivf" or layout == "static"
+                    if supported:
+                        rp = db.validate(plan)
+                        assert rp.front == front
+                        assert rp.backend == backend
+                    else:
+                        with pytest.raises(PlanError) as ei:
+                            db.validate(plan)
+                        msg = str(ei.value)
+                        # the error names the unsupported (front, layout)
+                        # pair and what the layout does support
+                        assert f"front {front!r}" in msg
+                        assert f"{layout!r} index layout" in msg
+                        assert "IVF front only" in msg
+
+    def test_raises_at_plan_time_not_mid_search(self, index):
+        # queries=None would explode inside any stage — PlanError must fire
+        # before the executor ever sees them
+        with pytest.raises(PlanError):
+            Database.wrap(index).query(None, plan=QueryPlan(front="graph",
+                                                            shards=1))
+
+    def test_unknown_names(self, index):
+        db = Database.wrap(index)
+        with pytest.raises(PlanError, match="front"):
+            db.validate(QueryPlan(front="lsh"))
+        with pytest.raises(PlanError, match="backend"):
+            db.validate(QueryPlan(backend="cuda"))
+        with pytest.raises(PlanError, match="mode"):
+            db.validate(QueryPlan(mode="exact"))
+
+    def test_plan_error_is_value_error(self):
+        # legacy callers catch ValueError from the pre-registry if-chains
+        assert issubclass(PlanError, ValueError)
+
+    def test_resolution_fills_config_defaults(self, index, cfg):
+        rp = Database.wrap(index).validate(QueryPlan())
+        assert rp == QueryPlan(front=cfg.front, backend=cfg.backend,
+                               shards=None, k=cfg.final_k,
+                               refine_budget=cfg.refine_budget,
+                               micro_batch=cfg.micro_batch)
+
+    def test_baseline_mode_static_only(self, streaming, index):
+        with pytest.raises(PlanError, match="baseline"):
+            Database.wrap(streaming).validate(QueryPlan(mode="baseline"))
+        with pytest.raises(PlanError, match="baseline"):
+            Database.wrap(index).validate(QueryPlan(shards=1,
+                                                    mode="baseline"))
+
+    def test_shims_raise_plan_error(self, ds, index, streaming):
+        with pytest.raises(PlanError, match="IVF front"):
+            search(index, ds.queries, shards=1, front="graph")
+        with pytest.raises(PlanError, match="ivf"):
+            Retriever(index=streaming, front="graph").retrieve(ds.queries,
+                                                               k=5)
+
+    def test_wrapped_sharded_index_pins_shard_count(self, ds, index):
+        from repro.launch.mesh import make_search_mesh
+        si = partition_database(index, 1).place(make_search_mesh(1))
+        sdb = Database.wrap(si)
+        a, _ = search(index, ds.queries, k=5)
+        res = sdb.query(ds.queries, k=5)
+        assert jnp.array_equal(res.ids, a)
+        with pytest.raises(PlanError, match="partitioned"):
+            sdb.validate(QueryPlan(shards=2))
+        with pytest.raises(PlanError, match="IVF front"):
+            sdb.validate(QueryPlan(front="graph"))
+
+
+class TestShimEquivalence:
+    @pytest.mark.parametrize("backend", REFINE_BACKENDS)
+    def test_static(self, ds, index, backend):
+        ids, cost = search(index, ds.queries, k=5, backend=backend)
+        res = Database.wrap(index).query(
+            ds.queries, plan=QueryPlan(backend=backend, k=5))
+        assert jnp.array_equal(ids, res.ids)
+        assert _ledger_dict(cost) == _ledger_dict(res.cost)
+
+    @pytest.mark.parametrize("backend", REFINE_BACKENDS)
+    def test_sharded_single_device(self, ds, index, backend):
+        ids, cost = search(index, ds.queries, k=5, shards=1,
+                           backend=backend)
+        res = Database.wrap(index).query(
+            ds.queries, plan=QueryPlan(shards=1, backend=backend, k=5))
+        assert jnp.array_equal(ids, res.ids)
+        assert _ledger_dict(cost) == _ledger_dict(res.cost)
+
+    @pytest.mark.parametrize("backend", REFINE_BACKENDS)
+    def test_streaming(self, ds, streaming, backend):
+        ids, cost = search(streaming, ds.queries, k=5, backend=backend)
+        res = Database.wrap(streaming).query(
+            ds.queries, plan=QueryPlan(backend=backend, k=5))
+        assert jnp.array_equal(ids, res.ids)
+        assert _ledger_dict(cost) == _ledger_dict(res.cost)
+        assert "delta:cxl" in res.cost.ledger      # delta path was live
+
+    def test_retriever(self, ds, index):
+        r = Retriever(index=index, micro_batch=4)
+        ids, cost = r.retrieve(ds.queries, k=5)
+        res = Database.wrap(index).query(
+            ds.queries, plan=QueryPlan(front="ivf", micro_batch=4), k=5)
+        assert jnp.array_equal(ids, res.ids)
+        assert _ledger_dict(cost) == _ledger_dict(res.cost)
+
+    def test_baseline(self, ds, index):
+        ids, cost = baseline_search(index, ds.queries, k=5)
+        res = Database.wrap(index).query(
+            ds.queries, plan=QueryPlan(k=5, mode="baseline"))
+        assert jnp.array_equal(ids, res.ids)
+        assert _ledger_dict(cost) == _ledger_dict(res.cost)
+
+    def test_k_override_rederives_resolved_budget(self, ds, index, cfg):
+        import dataclasses as dc
+        # reusing an already-resolved plan (result.plan) with a per-call k
+        # must NOT keep the budget resolved for the old k: with no config
+        # budget pin, k=5 resolves to max(4·5, 32) = 32 and a k=12
+        # override must re-derive max(4·12, 32) = 48, not floor the stale
+        # 32 at k
+        open_idx = dc.replace(index,
+                              config=dc.replace(cfg, refine_budget=None))
+        db = Database.wrap(open_idx)
+        res = db.query(ds.queries, k=5)
+        assert res.plan.refine_budget == 32
+        res2 = db.query(ds.queries, plan=res.plan, k=12)
+        assert res2.plan.refine_budget == 48
+        # an explicitly pinned budget survives a k override
+        res3 = db.query(ds.queries, plan=QueryPlan(k=5, refine_budget=15),
+                        k=12)
+        assert res3.plan.refine_budget == 15
+
+    def test_baseline_cost_merges_into_ledger(self, ds, index):
+        from repro.memory import QueryCost
+        ledger = QueryCost()
+        res = Database.wrap(index).query(
+            ds.queries, plan=QueryPlan(k=5, mode="baseline"), cost=ledger)
+        assert res.cost is ledger
+        assert ledger.ledger["rerank:ssd"].accesses > 0
+
+    def test_micro_batch_per_call_override(self, ds, index):
+        db = Database.wrap(index)
+        a = db.query(ds.queries, k=5)
+        b = db.query(ds.queries, k=5, micro_batch=3)   # does not divide 8
+        assert jnp.array_equal(a.ids, b.ids)
+        assert _ledger_dict(a.cost) == _ledger_dict(b.cost)
+        r = Retriever(index=index, micro_batch=None)
+        ids, _ = r.retrieve(ds.queries, k=5, micro_batch=3)
+        assert jnp.array_equal(ids, a.ids)
+
+
+class TestDistances:
+    def test_static_matches_brute_force(self, ds, index):
+        res = Database.wrap(index).query(ds.queries, k=5)
+        assert np.allclose(np.asarray(res.distances),
+                           _brute_dists(ds, ds.queries, res.ids),
+                           rtol=1e-5, atol=1e-4)
+        # distances come out sorted ascending (top-k order)
+        d = np.asarray(res.distances)
+        assert (np.diff(d, axis=1) >= -1e-6).all()
+
+    def test_sharded_matches_static(self, ds, index):
+        db = Database.wrap(index)
+        a = db.query(ds.queries, k=5)
+        b = db.query(ds.queries, plan=QueryPlan(shards=1, k=5))
+        assert jnp.array_equal(a.ids, b.ids)
+        assert np.allclose(np.asarray(a.distances),
+                           np.asarray(b.distances), rtol=1e-5)
+
+    def test_streaming_matches_brute_force(self, ds, streaming):
+        # gid g ↔ ds.x[g] by construction of the fixture
+        res = Database.wrap(streaming).query(ds.queries, k=5)
+        assert np.allclose(np.asarray(res.distances),
+                           _brute_dists(ds, ds.queries, res.ids),
+                           rtol=1e-5, atol=1e-4)
+
+    def test_baseline_matches_brute_force(self, ds, index):
+        res = Database.wrap(index).query(
+            ds.queries, plan=QueryPlan(k=5, mode="baseline"))
+        assert np.allclose(np.asarray(res.distances),
+                           _brute_dists(ds, ds.queries, res.ids),
+                           rtol=1e-5, atol=1e-4)
+
+
+class TestExecutorCache:
+    def test_same_plan_same_executor(self, index):
+        db = Database.wrap(index)
+        assert db.executor_for(QueryPlan()) is db.executor_for(QueryPlan())
+        assert db.executor_for(QueryPlan()) is not \
+            db.executor_for(QueryPlan(backend="pallas"))
+        # k rides through the resolved plan: same k → same executor
+        assert db.executor_for(QueryPlan(k=5)) is db.executor_for(
+            QueryPlan())
+
+    def test_retriever_reuses_sharded_executor(self, ds, index):
+        # the pre-refactor Retriever rebuilt make_sharded_executor state on
+        # every retrieve; the plan-keyed cache must hand back ONE object
+        r = Retriever(index=index, shards=1, micro_batch=None)
+        e1 = r.db.executor_for(r.default_plan())
+        r.retrieve(ds.queries, k=5)
+        r.retrieve(ds.queries, k=5)
+        assert r.db.executor_for(r.default_plan()) is e1
+
+    def test_streaming_generation_invalidation(self, ds, cfg):
+        st = StreamingIndex(build(jax.random.PRNGKey(3), ds.x[:2000], cfg),
+                            StreamingConfig(auto_compact=False))
+        st.insert(ds.x[2000:])
+        db = Database.wrap(st)
+        plan, splan = QueryPlan(), QueryPlan(shards=1)
+        e1, s1 = db.executor_for(plan), db.executor_for(splan)
+        ids1, _ = Retriever(index=st, micro_batch=None).retrieve(
+            ds.queries, k=5)
+        assert db.executor_for(plan) is e1
+        assert db.executor_for(splan) is s1
+
+        st.compact()                      # generation bump → invalidate
+        e2, s2 = db.executor_for(plan), db.executor_for(splan)
+        assert e2 is not e1 and s2 is not s1
+        ids2, _ = Retriever(index=st, micro_batch=None).retrieve(
+            ds.queries, k=5)
+        assert jnp.array_equal(ids1, ids2)    # compaction preserves results
+
+        st.rebalance(2)                   # rebalance bumps generation too
+        assert db.executor_for(plan) is not e2
+        assert db.executor_for(splan) is not s2
+
+    def test_stale_generations_pruned(self, ds, cfg):
+        st = StreamingIndex(build(jax.random.PRNGKey(4), ds.x[:2000], cfg),
+                            StreamingConfig(auto_compact=False))
+        db = Database.wrap(st)
+        for i in range(4):
+            st.insert(ds.x[2000 + 100 * i: 2100 + 100 * i])
+            db.executor_for(QueryPlan())
+        gens = {k[0] for k in db._compiled}
+        assert gens == {db.generation}
+
+
+class TestResultAndRecords:
+    def test_result_carries_resolved_plan(self, ds, index, cfg):
+        res = Database.wrap(index).query(ds.queries,
+                                         plan=QueryPlan(backend="pallas"))
+        assert res.plan.backend == "pallas"
+        assert res.plan.front == cfg.front
+        assert res.plan.k == cfg.final_k
+        assert res.plan.refine_budget == cfg.refine_budget
+
+    def test_bench_emit_records_plan(self, ds, index):
+        from benchmarks import common
+        common.take_records()             # isolate from other state
+        res = Database.wrap(index).query(ds.queries, k=5)
+        common.emit("api_test_row", 1.0, cost=res.cost, plan=res.plan)
+        common.emit("api_test_planless", 1.0)
+        recs = common.take_records()
+        assert recs[0]["plan"]["front"] == "ivf"
+        assert recs[0]["plan"]["k"] == 5
+        assert recs[0]["plan"]["refine_budget"] == 20
+        assert recs[1]["plan"] is None    # every record carries the field
+
+    def test_rag_answer_rejects_plan_plus_retriever(self, ds, index):
+        from repro.serving import rag_answer
+        with pytest.raises(ValueError, match="not both"):
+            rag_answer(None, index, lambda t: ds.queries, None,
+                       retriever=Retriever(index=index),
+                       plan=QueryPlan(backend="pallas"))

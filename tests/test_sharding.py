@@ -125,8 +125,8 @@ def test_multishard_equivalence_8_devices():
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, jax.numpy as jnp
-from repro.anns import PipelineConfig, build, search
+import jax, jax.numpy as jnp, numpy as np
+from repro.anns import Database, PipelineConfig, QueryPlan, build, search
 from repro.data import make_dataset
 from repro.memory import Tier
 
@@ -135,6 +135,7 @@ ds = make_dataset(jax.random.PRNGKey(0), n=2500, d=32, n_queries=8,
 cfg = PipelineConfig(dim=32, pq_m=4, pq_k=32, nlist=16, nprobe=4,
                      final_k=5, refine_budget=20, trq_levels=2)
 idx = build(jax.random.PRNGKey(1), ds.x, cfg)
+db = Database.wrap(idx)
 
 def tier_bytes(cost):
     out = {}
@@ -144,6 +145,7 @@ def tier_bytes(cost):
     return out
 
 ids_u, cost_u = search(idx, ds.queries, k=5)
+res_u = db.query(ds.queries, k=5)
 for shards in (2, 4, 8):
     for backend in ("reference", "pallas"):
         ids_s, cost_s = search(idx, ds.queries, k=5, backend=backend,
@@ -155,6 +157,17 @@ for shards in (2, 4, 8):
         for tier in Tier:
             assert cost_s.tier_seconds(tier) <= cost_u.tier_seconds(tier) \
                 + 1e-12, (shards, backend, tier)
+        # the planned Database surface: same ids, same per-tier bytes,
+        # plus the exact distances the legacy tuple surface drops
+        res_s = db.query(ds.queries,
+                         plan=QueryPlan(shards=shards, backend=backend,
+                                        k=5))
+        assert jnp.array_equal(ids_u, res_s.ids), (shards, backend)
+        assert tier_bytes(cost_u) == tier_bytes(res_s.cost), (shards,
+                                                              backend)
+        assert np.allclose(np.asarray(res_s.distances),
+                           np.asarray(res_u.distances),
+                           rtol=1e-5), (shards, backend)
 print("MULTISHARD_OK")
 """
     import os
