@@ -16,7 +16,9 @@ far-memory channels.
 
 Standalone: ``python benchmarks/bench_throughput.py --shards 8`` fakes 8
 host devices (must be set before jax initializes) and writes
-``BENCH_bench_throughput.json``.
+``BENCH_bench_throughput.json``; ``--front graph`` runs the scale-out
+sweep through the halo-partitioned graph datapath instead of the IVF
+whole-list partitioner (records named ``fig6_sharded_graph_{s}x_qps``).
 """
 
 from __future__ import annotations
@@ -31,6 +33,9 @@ if __name__ == "__main__":          # must run BEFORE anything imports jax
     _ap.add_argument("--shards", type=int, default=None,
                      help="max shard count for the scale-out sweep; fakes "
                           "that many host devices")
+    _ap.add_argument("--front", choices=("ivf", "graph"), default="ivf",
+                     help="front stage for the scale-out sweep (the fixed "
+                          "IVF/CAGRA single-device figures always run)")
     _CLI_ARGS = _ap.parse_args()
     if _CLI_ARGS.shards and _CLI_ARGS.shards > 1 and \
             "xla_force_host_platform_device_count" not in \
@@ -77,26 +82,31 @@ def _fatrq_cost(index, queries, *, hw: bool, front: str = "ivf"
     return rec, cost, res.plan
 
 
-def _shard_sweep(ds, db: Database, *, max_shards: int | None) -> None:
+def _shard_sweep(ds, db: Database, *, max_shards: int | None,
+                 front: str = "ivf") -> None:
     """Scale-out: shard the database across the host-platform mesh and
-    report model-time QPS per shard count (parallel-shard fold)."""
+    report model-time QPS per shard count (parallel-shard fold).  The
+    ``front`` selects the partitioner + in-shard datapath — whole-list LPT
+    for IVF, vector ranges + halo frontier exchange for graph — and tags
+    the emitted record names so both sweeps coexist in one JSON."""
     q = ds.queries
     nq = q.shape[0]
     avail = len(jax.devices())
     limit = min(max_shards or avail, avail, db.index.ivf.nlist)
     counts = [s for s in (1, 2, 4, 8, 16) if s <= limit]
+    tag = "" if front == "ivf" else f"{front}_"
     t1 = None
     for s in counts:
-        res = db.query(q, plan=QueryPlan(shards=s, k=10))
+        res = db.query(q, plan=QueryPlan(front=front, shards=s, k=10))
         rec = recall_at_k(res.ids, ds.gt, 10)
         t = res.cost.total_seconds()
         t1 = t if t1 is None else t1
-        emit(f"fig6_sharded_{s}x_qps", t / nq * 1e6,
+        emit(f"fig6_sharded_{tag}{s}x_qps", t / nq * 1e6,
              f"recall={rec:.3f};scaleup={t1 / t:.2f}x", cost=res.cost,
-             plan=res.plan, qps=nq / t, shards=s)
+             plan=res.plan, qps=nq / t, shards=s, front=front)
 
 
-def run(*, max_shards: int | None = None) -> None:
+def run(*, max_shards: int | None = None, front: str = "ivf") -> None:
     ds, index = fatrq_index()
     db = Database.wrap(index)
     q = ds.queries
@@ -140,10 +150,10 @@ def run(*, max_shards: int | None = None) -> None:
          cost=cost_gf, plan=plan_gf, qps=nq / t_gf)
 
     # --- scale-out sweep through the sharded subsystem
-    _shard_sweep(ds, db, max_shards=max_shards)
+    _shard_sweep(ds, db, max_shards=max_shards, front=front)
 
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    run(max_shards=_CLI_ARGS.shards)
+    run(max_shards=_CLI_ARGS.shards, front=_CLI_ARGS.front)
     write_json("bench_throughput")

@@ -9,21 +9,25 @@ Layers, bottom-up:
 * ``executor`` — ``SearchExecutor`` runs front → refine → rerank fully
   batched over query micro-batches and folds the counters into a
   ``memory.QueryCost`` ledger with one host transfer per search.
-* ``sharding`` — scale-out: ``partition_database`` splits whole IVF lists
-  across shards, ``ShardedIndex`` places the stacked arrays on a 1-D
-  ``("search",)`` mesh, and ``ShardedExecutor`` runs the same stages per
-  shard under ``shard_map``, merging per-shard top-k and folding per-shard
+* ``sharding`` — scale-out: ``partition_database`` splits the database
+  per the front's registered partitioner (whole IVF lists for the IVF
+  front; vector ranges + halo edges for the graph front),
+  ``ShardedIndex`` places the stacked arrays on a 1-D ``("search",)``
+  mesh, and ``ShardedExecutor`` runs the same stages per shard under
+  ``shard_map`` (the graph front exchanges its beam frontier across
+  shards each hop), merging per-shard top-k and folding per-shard
   ledgers with ``QueryCost.merge_parallel`` (max time, summed bytes).
   Top-k ids are bit-identical to the unsharded executor (up to exact-f32
   estimate ties at the SSD budget boundary, e.g. duplicate rows — see
   ``sharding._rerank_survivors_sharded``).
 * ``streaming`` — the mutable layer: ``StreamingIndex`` wraps a built
   index with online ``insert``/``delete`` (incremental TRQ encode, per-list
-  delta spill pages, tombstone bitmap), a generation-aware search path that
-  probes base ∪ delta lists under one QueryCost ledger (delta traffic on a
-  distinct ``delta:cxl`` entry), and drift-triggered ``compact()`` /
-  ``rebalance()`` through the same LPT partitioner the sharded subsystem
-  uses.
+  delta spill pages, tombstone bitmap, online graph edge insertion), a
+  generation-aware search path — base ∪ delta IVF probe or graph beam
+  traversal over the maintained adjacency — under one QueryCost ledger
+  (delta traffic on a distinct ``delta:cxl`` entry), and drift-triggered
+  ``compact()`` / ``rebalance()`` through the same LPT partitioner the
+  sharded subsystem uses.
 * ``registry`` — the capability registry: every front stage and refine
   backend declares the index layouts (static / sharded / streaming) it
   supports via ``register_front`` / ``register_backend``; unsupported

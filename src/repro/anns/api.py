@@ -210,12 +210,19 @@ class Database:
         elif p.mode != "fatrq":
             raise PlanError(f"unknown search mode {p.mode!r}; expected "
                             f"'fatrq' or 'baseline'")
-        if self.layout == "sharded" and \
-                p.shards not in (None, self.index.n_shards):
-            raise PlanError(
-                f"plan asks for {p.shards} shards but the wrapped "
-                f"ShardedIndex is partitioned {self.index.n_shards} ways — "
-                f"re-partition the base index instead")
+        if self.layout == "sharded":
+            if p.shards not in (None, self.index.n_shards):
+                raise PlanError(
+                    f"plan asks for {p.shards} shards but the wrapped "
+                    f"ShardedIndex is partitioned {self.index.n_shards} "
+                    f"ways — re-partition the base index instead")
+            if p.front != self.index.front:
+                raise PlanError(
+                    f"plan asks for the {p.front!r} front but the wrapped "
+                    f"ShardedIndex was partitioned for the "
+                    f"{self.index.front!r} front (IVF shards whole lists, "
+                    f"graph shards vector ranges + halo) — re-partition "
+                    f"the base index for {p.front!r} instead")
         return p
 
     # -- compilation ------------------------------------------------------
@@ -249,14 +256,14 @@ class Database:
             if rp.shards is not None:
                 idx, gid = st.rebuild_static()
                 ex = make_sharded_executor(
-                    idx, shards=rp.shards, backend=rp.backend,
-                    micro_batch=rp.micro_batch,
+                    idx, shards=rp.shards, front=rp.front,
+                    backend=rp.backend, micro_batch=rp.micro_batch,
                     refine_budget=rp.refine_budget, mesh=mesh)
                 entry = (ex, jnp.asarray(gid))
             else:
                 dev = st._dev()
-                ex = st._executor(rp.backend, rp.micro_batch, dev,
-                                  refine_budget=rp.refine_budget)
+                ex = st._executor(rp.front, rp.backend, rp.micro_batch,
+                                  dev, refine_budget=rp.refine_budget)
                 entry = (ex, dev["row_gid"])
         elif self.layout == "sharded":
             ex = ShardedExecutor(sharded=self.index, backend=rp.backend,
@@ -265,9 +272,9 @@ class Database:
             entry = (ex, None)
         elif rp.shards is not None:
             ex = make_sharded_executor(
-                self.index, shards=rp.shards, backend=rp.backend,
-                micro_batch=rp.micro_batch, refine_budget=rp.refine_budget,
-                mesh=mesh)
+                self.index, shards=rp.shards, front=rp.front,
+                backend=rp.backend, micro_batch=rp.micro_batch,
+                refine_budget=rp.refine_budget, mesh=mesh)
             entry = (ex, None)
         else:
             ex = make_executor(self.index, front=rp.front,

@@ -11,8 +11,9 @@ round-trips the old monolithic pipeline did.
 Construction is cheap (stages hold references to index arrays; all device
 functions are module-level jits, so compilation caches globally), except
 ``front="graph"`` which builds the kNN graph on first use and caches it on
-the executor.  ``make_executor`` memoizes executors per index so facade
-callers (``anns.pipeline``, ``serving``) can call it per search.
+the index per degree (``stages.graph_for``).  ``make_executor`` memoizes
+executors per index so facade callers (``anns.pipeline``, ``serving``) can
+call it per search.
 """
 
 from __future__ import annotations

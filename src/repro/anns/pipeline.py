@@ -138,9 +138,10 @@ def search(index: FaTRQIndex, queries: jax.Array, *, k: int | None = None,
     selection for this call (e.g. ``backend="pallas"`` routes refinement
     through the fused Pallas kernel).  ``shards`` > 1 routes the call
     through the sharded subsystem (``anns.sharding``); ``index`` may also
-    be a ``StreamingIndex`` or ``ShardedIndex``.  Unsupported
-    (front, layout) combinations raise ``api.PlanError`` at plan time
-    (e.g. the graph front on sharded or streaming layouts).
+    be a ``StreamingIndex`` or ``ShardedIndex``.  Both registered fronts
+    (IVF and graph) run on every layout; invalid plans — unknown names, a
+    shard count mismatching a wrapped ``ShardedIndex``, baseline mode off
+    the static layout — raise ``api.PlanError`` at plan time.
     """
     from repro.anns.api import Database, QueryPlan
     res = Database.wrap(index).query(

@@ -4,11 +4,13 @@ One logical index, many physical layouts: a search request names a *front*
 stage (candidate generation), a *refine backend* (FaTRQ estimation
 datapath), and runs against an index *layout* ("static" ``FaTRQIndex``,
 "sharded" ``ShardedIndex`` on a device mesh, "streaming"
-``StreamingIndex`` with delta lists).  Not every combination exists — the
-graph front has no sharded frontier exchange and no online edge insertion
-yet — and before this layer each entry point re-derived that matrix with
-its own ``isinstance``/string if-chains and a triplicated "IVF front only"
-error string.
+``StreamingIndex`` with delta lists).  The built-in matrix is CLOSED: both
+fronts (IVF and graph) run on all three layouts — the graph front gets a
+halo-partitioned sharded traversal from ``anns.sharding`` and online edge
+insertion from ``anns.streaming``/``index.graph``.  Before this layer each
+entry point re-derived the support matrix with its own
+``isinstance``/string if-chains and a triplicated "IVF front only" error
+string.
 
 Here every front stage and refine backend *declares* what it supports:
 
@@ -17,19 +19,23 @@ Here every front stage and refine backend *declares* what it supports:
   ``factory(index, **opts) -> FrontStage`` building the stage object for
   that physical layout (the sharded layout inlines its front inside the
   ``shard_map`` body, so it validates against the registry but constructs
-  no stage object).
+  no stage object — it registers ``ShardedFrontHooks`` instead).
 * ``register_backend(name, make=cls, layouts=...)`` — refine backends
   (today both run everywhere).
 * ``add_front_factory(name, layout, factory)`` — a later-imported
   subsystem plugs its physical variant into an existing front (e.g.
-  ``anns.streaming`` attaches the base ∪ delta IVF front).
+  ``anns.streaming`` attaches the base ∪ delta IVF front and the
+  tombstone-aware graph front).
+* ``register_sharded_front(name, hooks)`` — a layout-pluggable
+  partitioner + shard_map front body + ledger fold for the sharded
+  datapath (``anns.sharding`` registers both built-ins: whole-list LPT
+  for IVF, vector ranges + halo edges for graph).
 
 ``validate_combo`` is the single choke point: every unsupported pair
 raises ``PlanError`` *at plan time* with a message naming the (front,
 layout) pair, instead of a mid-search ``ValueError`` from whichever copy
 of the dispatch ladder happened to notice first.  A new front×layout
-combination (ROADMAP: graph-front sharding) becomes a registry entry, not
-a fourth copy of the ladder.
+combination stays a registry entry, not a fourth copy of the ladder.
 """
 
 from __future__ import annotations
@@ -47,6 +53,26 @@ class PlanError(ValueError):
     ad-hoc errors keep working."""
 
 
+@dataclass(frozen=True)
+class ShardedFrontHooks:
+    """How a front runs on the sharded layout (see ``anns.sharding``):
+
+    * ``partition(index, n_shards) -> (rows_per, rep, db, args)`` — split
+      the database into per-shard row sets plus the front's own replicated
+      (``rep``) and shard-stacked (``db``) array pytrees and a hashable
+      tuple of static traversal args.
+    * ``body(queries, rep, db, codebook, pq_codes, **args) -> Candidates``
+      — the front's candidate generation inside the shard_map body (free
+      to use collectives over the mesh axis, e.g. the graph front's
+      per-hop frontier exchange).
+    * ``fold(cost, counts, layout)`` — the front's per-shard ledger fold.
+    """
+
+    partition: Callable
+    body: Callable
+    fold: Callable
+
+
 @dataclass
 class FrontSpec:
     """A registered front stage: supported layouts + per-layout factory."""
@@ -54,6 +80,7 @@ class FrontSpec:
     name: str
     layouts: tuple[str, ...]
     factories: dict[str, Callable] = field(default_factory=dict)
+    sharded: ShardedFrontHooks | None = None
 
 
 @dataclass
@@ -95,6 +122,27 @@ def add_front_factory(name: str, layout: str, factory: Callable) -> None:
         raise ValueError(f"front {name!r} does not declare layout "
                          f"{layout!r} (declared: {spec.layouts})")
     spec.factories[layout] = factory
+
+
+def register_sharded_front(name: str, hooks: ShardedFrontHooks) -> None:
+    """Attach the sharded-datapath hooks (partitioner + shard_map body +
+    fold) to an already-registered front declaring the "sharded" layout."""
+    spec = front_spec(name)
+    if "sharded" not in spec.layouts:
+        raise ValueError(f"front {name!r} does not declare layout "
+                         f"'sharded' (declared: {spec.layouts})")
+    spec.sharded = hooks
+
+
+def sharded_front(name: str) -> ShardedFrontHooks:
+    """The sharded-datapath hooks for ``name``.  A front declaring the
+    sharded layout without registering hooks is a wiring bug, not a plan
+    error."""
+    spec = front_spec(name)
+    if spec.sharded is None:
+        raise KeyError(f"front {name!r} has no sharded-front hooks "
+                       f"registered (declared layouts: {spec.layouts})")
+    return spec.sharded
 
 
 def front_names() -> tuple[str, ...]:

@@ -3,27 +3,48 @@
 Scale-out of the staged executor across devices (paper Fig. 6 scales
 throughput by replicating the refinement datapath across far-memory
 channels; COSMOS/HAVEN reach billion-scale by partitioning the candidate
-datapath).  Three pieces:
+datapath).  The partitioner and the in-shard front are LAYOUT-PLUGGABLE:
+each front registers ``registry.ShardedFrontHooks`` — a partition scheme,
+a shard_map front body, and a ledger fold — and everything downstream of
+candidate generation (refine, rerank, merge, cost fold) is shared.
 
-* ``partition_database`` — IVF-list-aware partitioner: WHOLE inverted
-  lists are assigned to shards (a candidate's codes, scalars and full
-  vector co-reside with its list), balanced by list length with an LPT
-  greedy (heaviest list onto the lightest shard).  Per-shard arrays are
-  stacked on a leading shard axis and row ids are re-indexed shard-locally;
-  ``gid`` maps local rows back to global database ids.
+* ``partition_database(index, S, front=...)`` — dispatches to the front's
+  partitioner:
+
+  - **IVF** assigns WHOLE inverted lists to shards (a candidate's codes,
+    scalars and full vector co-reside with its list), balanced by list
+    length with an LPT greedy (heaviest list onto the lightest shard).
+  - **graph** partitions the VECTORS into contiguous row ranges and gives
+    each shard its subgraph plus HALO state: the adjacency of its owned
+    rows (global ids and local slots) and the PQ-reconstruction vectors of
+    every off-shard boundary neighbor, so a shard can expand any node it
+    owns without touching another shard's memory mid-hop.
+
+  Per-shard record arrays are stacked on a leading shard axis and row ids
+  are re-indexed shard-locally; ``gid`` maps local rows back to global
+  database ids.
 
 * ``ShardedIndex`` — the stacked database placed on a 1-D ``("search",)``
-  mesh: every per-record array sharded on its leading axis, the coarse
-  centroids / PQ codebook / calibration model replicated.
+  mesh: every per-record array (and the front's ``front_db``) sharded on
+  its leading axis; the PQ codebook, calibration model and the front's
+  ``front_rep`` pytree (IVF: the coarse centroids) replicated.
 
-* ``ShardedExecutor`` — runs the existing front → refine → rerank stages
-  per shard under ``repro.compat.shard_map`` (queries replicated, database
-  sharded).  Equivalence with the unsharded ``SearchExecutor`` is exact,
-  not approximate, because every data-dependent decision is globalized:
+* ``ShardedExecutor`` — runs front → refine → rerank per shard under
+  ``repro.compat.shard_map`` (queries replicated, database sharded).
+  Equivalence with the unsharded ``SearchExecutor`` is exact, not
+  approximate, because every data-dependent decision is globalized:
 
-    - front: each shard ranks the REPLICATED centroid table and selects
-      the global top-``nprobe`` lists, keeping only the ones it owns — the
-      union across shards is exactly the unsharded probe set;
+    - IVF front: each shard ranks the REPLICATED centroid table and
+      selects the global top-``nprobe`` lists, keeping only the ones it
+      owns — the union across shards is exactly the unsharded probe set;
+    - graph front: the beam state (global ids, distances, expanded flags)
+      is REPLICATED across shards and advances in lockstep; each hop, the
+      owner of every picked node contributes its adjacency and the
+      locally-computed neighbor distances (from its halo copy of the PQ
+      reconstructions) to a ``psum`` frontier exchange — zeros elsewhere,
+      so the summed lists are bit-exact — and the shared
+      ``graph.beam_merge`` applies the exact dedup/tie-breaking the
+      single-device search uses;
     - refine: pruning thresholds pool each shard's k smallest upper bounds
       with an all-gather, so the global kth smallest (and hence every
       survivor mask) matches the unsharded run bit-for-bit;
@@ -55,11 +76,13 @@ from repro.anns import registry
 from repro.anns.executor import (_accumulate, _cat, fold_counts,
                                  iter_chunks, search_budget)
 from repro.anns.stages import (Candidates, Counters, adc_score,
-                               fold_ivf_front_cost, rank_centroid_lists)
+                               fold_graph_front_cost, fold_ivf_front_cost,
+                               graph_for, rank_centroid_lists)
 from repro.compat import shard_map
 from repro.core.decomposition import RecordScalars
 from repro.core.estimator import pooled_k_smallest
 from repro.core.trq import TRQCodes, TRQLevel
+from repro.index import graph as graph_mod
 from repro.memory import QueryCost, RecordLayout
 from repro.quant import pq as pq_mod
 
@@ -83,19 +106,25 @@ def _stack_rows(arr, rows_per_shard: list[np.ndarray], n_max: int):
 class ShardedIndex:
     """A FaTRQIndex partitioned into S shards, stacked on a leading axis.
 
-    Replicated: ``centroids`` (coarse table), ``codebook`` (PQ), and the
-    calibration model inside ``trq``.  Sharded (leading axis S):
-    ``list_gid``/``lists`` (inverted lists with LOCAL row ids), per-record
+    Replicated: ``codebook`` (PQ), the calibration model inside ``trq``,
+    and the front's ``front_rep`` pytree (IVF: the coarse centroid table;
+    graph: empty — its traversal state is the replicated beam itself).
+    Sharded (leading axis S): the front's ``front_db`` pytree (IVF:
+    inverted lists with LOCAL row ids; graph: subgraph adjacency + halo
+    vectors + the global→local owner map), per-record
     ``pq_codes``/``trq``/``x``, and ``gid`` (local row → global id).
+    ``front_args`` is the hashable tuple of static traversal parameters
+    captured at partition time.
     """
 
     config: "PipelineConfig"         # noqa: F821 - import cycle via pipeline
     layout: RecordLayout
     n_shards: int
-    centroids: jax.Array             # (nlist, D) replicated
+    front: str                       # which front this partition serves
     codebook: pq_mod.PQCodebook      # replicated
-    list_gid: jax.Array              # (S, Lmax) global list id, -1 pad
-    lists: jax.Array                 # (S, Lmax, cap) LOCAL row ids, -1 pad
+    front_rep: tuple                 # replicated front pytree
+    front_db: tuple                  # sharded front pytree (leading S axis)
+    front_args: tuple                # static (name, value) traversal args
     pq_codes: jax.Array              # (S, n_max, M) uint8
     trq: TRQCodes                    # every per-record leaf (S, n_max, ...)
     x: jax.Array                     # (S, n_max, D) full precision ("SSD")
@@ -103,9 +132,23 @@ class ShardedIndex:
     shard_rows: np.ndarray           # (S,) host-side real row counts
     mesh: jax.sharding.Mesh | None = None
 
+    # back-compat views of the IVF front's pytrees (pre-refactor fields)
+    @property
+    def centroids(self) -> jax.Array:
+        return self.front_rep[0]
+
+    @property
+    def list_gid(self) -> jax.Array:
+        return self.front_db[0]
+
+    @property
+    def lists(self) -> jax.Array:
+        return self.front_db[1]
+
     def place(self, mesh) -> "ShardedIndex":
         """Place the index on a 1-D ``("search",)`` mesh: per-record arrays
-        sharded on the leading shard axis, globals replicated."""
+        and the front_db sharded on the leading shard axis, globals
+        replicated."""
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         if sizes.get(AXIS) != self.n_shards:
             raise ValueError(f"mesh axis {AXIS!r} has size {sizes.get(AXIS)} "
@@ -121,9 +164,9 @@ class ShardedIndex:
             model=jax.tree.map(put_r, self.trq.model))
         return dataclasses.replace(
             self, mesh=mesh,
-            centroids=put_r(self.centroids),
             codebook=jax.tree.map(put_r, self.codebook),
-            list_gid=put_s(self.list_gid), lists=put_s(self.lists),
+            front_rep=jax.tree.map(put_r, self.front_rep),
+            front_db=jax.tree.map(put_s, self.front_db),
             pq_codes=put_s(self.pq_codes), trq=trq,
             x=put_s(self.x), gid=put_s(self.gid))
 
@@ -148,13 +191,10 @@ def lpt_assign(lens: np.ndarray, n_shards: int
     return members, loads
 
 
-def partition_database(index, n_shards: int) -> ShardedIndex:
-    """IVF-list-aware partitioner: whole inverted lists → shards.
-
-    Lists are assigned with the ``lpt_assign`` greedy.  All per-record
-    arrays (PQ codes, TRQ levels + scalars, full vectors) are gathered into
-    shard-local row order so the per-shard datapath indexes them densely.
-    """
+def _partition_ivf_front(index, n_shards: int):
+    """IVF partitioner: whole inverted lists → shards via ``lpt_assign``.
+    Returns (per-shard global rows, replicated pytree, shard-stacked front
+    pytree, static front args)."""
     ivf = index.ivf
     lens = np.asarray(ivf.list_len)
     lists_np = np.asarray(ivf.lists)
@@ -180,6 +220,76 @@ def partition_database(index, n_shards: int) -> ShardedIndex:
             off += n_li
         rows_per.append(np.concatenate(rows) if rows
                         else np.zeros((0,), np.int32))
+    rep = (ivf.centroids,)
+    fdb = (jnp.asarray(list_gid), jnp.asarray(local_lists))
+    return rows_per, rep, fdb, (("nprobe", index.config.nprobe),)
+
+
+def _partition_graph_front(index, n_shards: int):
+    """Graph partitioner: contiguous vector ranges → shards, each with its
+    subgraph + halo.
+
+    Per shard: the adjacency of its owned rows both as GLOBAL ids (what the
+    frontier exchange publishes) and as LOCAL slots into ``xs_loc`` — the
+    shard's copy of the PQ reconstructions for its owned rows FOLLOWED BY
+    every off-shard boundary neighbor (the halo).  ``loc_of`` maps global
+    row → owned local row (-1 off-shard): it decides frontier-exchange
+    ownership and maps the final beam onto the shard's record store.
+    ``xs_loc`` is gathered from one globally-decoded array so halo copies
+    are bit-identical to the owner's values.
+    """
+    n = int(index.x.shape[0])
+    if not 1 <= n_shards <= n:
+        raise ValueError(f"n_shards={n_shards} must be in [1, n={n}] — "
+                         f"vectors are the partitioning unit")
+    g = np.asarray(graph_for(index).neighbors)
+    degree = g.shape[1]
+    x_score = np.asarray(pq_mod.decode(index.codebook, index.pq_codes))
+    rows_per = [r.astype(np.int32)
+                for r in np.array_split(np.arange(n), n_shards)]
+    ns_max = max(r.size for r in rows_per)
+
+    loc_of = np.full((n_shards, n), -1, np.int32)
+    halos: list[np.ndarray] = []
+    for s, rows in enumerate(rows_per):
+        loc_of[s, rows] = np.arange(rows.size, dtype=np.int32)
+        nbr = g[rows]
+        halos.append(np.unique(nbr[loc_of[s, nbr] < 0]))
+    nloc_max = max(1, max(r.size + h.size for r, h in zip(rows_per, halos)))
+
+    xs_loc = np.zeros((n_shards, nloc_max, x_score.shape[1]), np.float32)
+    adj_gid = np.zeros((n_shards, ns_max, degree), np.int32)
+    adj_loc = np.zeros((n_shards, ns_max, degree), np.int32)
+    for s, (rows, halo) in enumerate(zip(rows_per, halos)):
+        local = np.concatenate([rows, halo])
+        xs_loc[s, :local.size] = x_score[local]
+        full_loc = loc_of[s].copy()
+        full_loc[halo] = rows.size + np.arange(halo.size, dtype=np.int32)
+        adj_gid[s, :rows.size] = g[rows]
+        adj_loc[s, :rows.size] = full_loc[g[rows]]
+
+    fdb = (jnp.asarray(xs_loc), jnp.asarray(adj_gid),
+           jnp.asarray(adj_loc), jnp.asarray(loc_of))
+    # static traversal args — MUST match GraphFrontStage's defaults, the
+    # single-shard baseline the equivalence tests pin against
+    args = (("beam", 64), ("iters", 32), ("expand", 4), ("n", n),
+            ("degree", degree))
+    return rows_per, (), fdb, args
+
+
+def partition_database(index, n_shards: int,
+                       front: str = "ivf") -> ShardedIndex:
+    """Partition ``index`` for ``front``'s sharded datapath.
+
+    The front's registered hooks choose the scheme (whole IVF lists vs
+    vector ranges + halo); the per-record arrays (PQ codes, TRQ levels +
+    scalars, full vectors) are then gathered into shard-local row order the
+    same way for every front, so the refine/rerank datapath indexes them
+    densely regardless of how candidates were generated.
+    """
+    hooks = registry.sharded_front(front)
+    rows_per, front_rep, front_db, front_args = hooks.partition(
+        index, n_shards)
     shard_rows = np.array([r.size for r in rows_per])
     n_max = max(int(shard_rows.max()), 1)
 
@@ -202,13 +312,125 @@ def partition_database(index, n_shards: int) -> ShardedIndex:
 
     return ShardedIndex(
         config=index.config, layout=index.layout, n_shards=n_shards,
-        centroids=ivf.centroids, codebook=index.codebook,
-        list_gid=jnp.asarray(list_gid), lists=jnp.asarray(local_lists),
+        front=front, codebook=index.codebook,
+        front_rep=front_rep, front_db=front_db, front_args=front_args,
         pq_codes=_stack_rows(index.pq_codes, rows_per, n_max),
         trq=TRQCodes(dim=trq.dim, levels=levels, scalars=scalars,
                      model=trq.model),
         x=_stack_rows(index.x, rows_per, n_max),
         gid=jnp.asarray(gid), shard_rows=shard_rows)
+
+
+# ------------------------------------------------------ per-shard fronts
+
+
+def _ivf_shard_front(queries, rep, fdb, codebook, pq_codes, *,
+                     nprobe: int) -> Candidates:
+    """IVF front inside the shard_map body: rank the replicated centroid
+    table globally, gather only the chosen lists this shard owns."""
+    (centroids,) = rep
+    list_gid, lists = fdb
+    nq = queries.shape[0]
+    lmax, cap = lists.shape
+
+    d_cent, top_lists = rank_centroid_lists(centroids, queries,
+                                            nprobe=nprobe)
+    chosen = jnp.any(list_gid[None, :, None] == top_lists[:, None, :],
+                     axis=-1)                                 # (Q, Lmax)
+    # Gather only the chosen owned lists — the global top-nprobe set has
+    # nprobe lists TOTAL across shards, so ≤ nprobe local slots always
+    # suffice; scoring the whole shard would cost Lmax/nprobe× more.
+    pl = min(nprobe, lmax)
+    d_own = jnp.where(chosen & (list_gid >= 0)[None, :],
+                      d_cent[:, jnp.maximum(list_gid, 0)], jnp.inf)
+    _, slot = jax.lax.top_k(-d_own, pl)                       # (Q, pl)
+    sel = jnp.take_along_axis(chosen, slot, axis=1)           # (Q, pl)
+    ids_l = lists[slot]                                       # (Q, pl, cap)
+    valid = ((ids_l >= 0) & sel[:, :, None]).reshape(nq, pl * cap)
+    ids = jnp.maximum(ids_l.reshape(nq, pl * cap), 0)
+    d0 = adc_score(codebook, pq_codes[ids], queries, valid)
+    return Candidates(ids=ids, valid=valid, d0=d0,
+                      counters={"front_cand": jnp.sum(valid)})
+
+
+def _graph_shard_front(queries, rep, fdb, codebook, pq_codes, *, beam: int,
+                       iters: int, expand: int, n: int,
+                       degree: int) -> Candidates:
+    """Graph front inside the shard_map body: replicated beam, per-hop
+    frontier exchange over the halo-partitioned subgraphs.
+
+    The beam state (global ids, distances, expanded flags) is identical on
+    every shard and advances in lockstep.  Each hop, the shared
+    ``graph.pick_frontier`` selects the same picks everywhere; the OWNER of
+    each picked node contributes its adjacency row (global ids) and the
+    neighbor distances computed from its local ``xs_loc`` copy, everyone
+    else contributes zeros, and one ``psum`` per tensor reassembles the
+    exact flattened neighbor list the single-device search builds (x + 0
+    is exact for finite f32, and each node has exactly one owner).  The
+    shared ``graph.beam_merge`` then applies the identical dedup /
+    tie-breaking, so the final beam is bit-identical to the unsharded
+    ``GraphFrontStage`` — each shard claims the slots it owns and
+    ADC-scores only those against its local record store.
+    """
+    xs_loc, adj_gid, adj_loc, loc_of = fdb
+    nq = queries.shape[0]
+    start = jax.random.randint(jax.random.PRNGKey(0), (beam,), 0, n)
+
+    def owner_dist(gids):
+        """(Q, ...) global ids → (owned?, psum'd exact distances)."""
+        lrow = loc_of[gids]
+        own = lrow >= 0
+        dloc = jnp.sum(
+            (xs_loc[jnp.maximum(lrow, 0)] - queries.reshape(
+                (nq,) + (1,) * (gids.ndim - 1) + (-1,))) ** 2, axis=-1)
+        return own, jax.lax.psum(jnp.where(own, dloc, 0.0), AXIS)
+
+    ids0 = jnp.broadcast_to(start[None], (nq, beam))
+    _, ds0 = owner_dist(ids0)
+    exp0 = jnp.zeros((nq, beam), bool)
+
+    def body(carry, _):
+        ids, ds, expanded, hops = carry
+        picks, expanded = jax.vmap(
+            partial(graph_mod.pick_frontier, expand=expand))(ds, expanded)
+        pg = jnp.take_along_axis(ids, picks, axis=1)          # (Q, E)
+        pl = loc_of[pg]
+        own = pl >= 0
+        pls = jnp.maximum(pl, 0)
+        neigh = jax.lax.psum(
+            jnp.where(own[..., None], adj_gid[pls], 0), AXIS)
+        # neighbor distances come from the owner's adjacency-LOCAL slots
+        # (its xs_loc covers owned rows + halo, so every edge resolves)
+        nd = jnp.sum((xs_loc[adj_loc[pls]]
+                      - queries[:, None, None, :]) ** 2, axis=-1)
+        nd = jax.lax.psum(jnp.where(own[..., None], nd, 0.0), AXIS)
+        hops = hops + jnp.sum(own.astype(jnp.int32))
+        ids, ds, expanded = jax.vmap(
+            partial(graph_mod.beam_merge, beam=beam))(
+            ids, ds, expanded, neigh.reshape(nq, -1), nd.reshape(nq, -1))
+        return (ids, ds, expanded, hops), None
+
+    (ids, ds, _, hops), _ = jax.lax.scan(
+        body, (ids0, ds0, exp0, jnp.asarray(0, jnp.int32)), None,
+        length=iters)
+    order = jnp.argsort(ds, axis=1)
+    beam_ids = jnp.take_along_axis(ids, order, axis=1)        # (Q, beam)
+
+    lfin = loc_of[beam_ids]
+    valid = lfin >= 0                                         # owned slots
+    ids_local = jnp.maximum(lfin, 0)
+    d0 = adc_score(codebook, pq_codes[ids_local], queries, valid)
+    return Candidates(ids=ids_local, valid=valid, d0=d0,
+                      counters={"front_cand": jnp.sum(valid),
+                                "front_hops": hops * degree})
+
+
+registry.register_sharded_front("ivf", registry.ShardedFrontHooks(
+    partition=_partition_ivf_front, body=_ivf_shard_front,
+    fold=fold_ivf_front_cost))
+registry.register_sharded_front("graph", registry.ShardedFrontHooks(
+    partition=_partition_graph_front, body=_graph_shard_front,
+    fold=fold_graph_front_cost))
 
 
 # ------------------------------------------------------ per-shard datapath
@@ -248,39 +470,26 @@ def _rerank_survivors_sharded(x, gid, queries, ids, est, alive, *, k: int,
     return d, fetch_gid, jnp.sum(fetch_alive)
 
 
-def _shard_body(queries, centroids, codebook, model, db, *, dim: int,
-                nprobe: int, k: int, budget: int, bound: str, z: float,
-                backend: str):
+def _shard_body(queries, front_rep, codebook, model, front_db, rec_db, *,
+                dim: int, k: int, budget: int, bound: str, z: float,
+                backend: str, front: str, front_args: tuple):
     """One shard's front → refine → rerank, with globalized decisions.
 
-    Runs under shard_map: ``queries``/``centroids``/``codebook``/``model``
-    are replicated, ``db`` leaves carry a leading length-1 shard-block dim.
+    Runs under shard_map: ``queries``/``front_rep``/``codebook``/``model``
+    are replicated; ``front_db``/``rec_db`` leaves carry a leading
+    length-1 shard-block dim.  The front's candidate generation comes from
+    its registered ``ShardedFrontHooks.body``; refine, rerank and the
+    cross-shard merge are front-agnostic.
     """
-    list_gid, lists, pq_codes, levels, scalars, x, gid = jax.tree.map(
-        lambda a: a[0], db)
+    front_local = jax.tree.map(lambda a: a[0], front_db)
+    pq_codes, levels, scalars, x, gid = jax.tree.map(
+        lambda a: a[0], rec_db)
     trq = TRQCodes(dim=dim, levels=levels, scalars=scalars, model=model)
-    nq = queries.shape[0]
-    lmax, cap = lists.shape
 
-    # -- front: rank the replicated centroid table, keep owned lists ------
-    d_cent, top_lists = rank_centroid_lists(centroids, queries,
-                                            nprobe=nprobe)
-    chosen = jnp.any(list_gid[None, :, None] == top_lists[:, None, :],
-                     axis=-1)                                 # (Q, Lmax)
-    # Gather only the chosen owned lists — the global top-nprobe set has
-    # nprobe lists TOTAL across shards, so ≤ nprobe local slots always
-    # suffice; scoring the whole shard would cost Lmax/nprobe× more.
-    pl = min(nprobe, lmax)
-    d_own = jnp.where(chosen & (list_gid >= 0)[None, :],
-                      d_cent[:, jnp.maximum(list_gid, 0)], jnp.inf)
-    _, slot = jax.lax.top_k(-d_own, pl)                       # (Q, pl)
-    sel = jnp.take_along_axis(chosen, slot, axis=1)           # (Q, pl)
-    ids_l = lists[slot]                                       # (Q, pl, cap)
-    valid = ((ids_l >= 0) & sel[:, :, None]).reshape(nq, pl * cap)
-    ids = jnp.maximum(ids_l.reshape(nq, pl * cap), 0)
-    d0 = adc_score(codebook, pq_codes[ids], queries, valid)
-    cand = Candidates(ids=ids, valid=valid, d0=d0,
-                      counters={"front_cand": jnp.sum(valid)})
+    # -- front: the registered per-shard body (may use mesh collectives) --
+    cand = registry.sharded_front(front).body(
+        queries, front_rep, front_local, codebook, pq_codes,
+        **dict(front_args))
 
     # -- refine: registered backends, thresholds pooled across the axis ---
     be = registry.make_backend(backend)
@@ -305,18 +514,18 @@ def _shard_body(queries, centroids, codebook, model, db, *, dim: int,
     return topk, topk_d, counters
 
 
-@partial(jax.jit, static_argnames=("mesh", "dim", "nprobe", "k", "budget",
-                                   "bound", "z", "backend"))
-def _sharded_search(mesh, queries, centroids, codebook, trq_model, db, *,
-                    dim: int, nprobe: int, k: int, budget: int, bound: str,
-                    z: float, backend: str):
-    body = partial(_shard_body, dim=dim, nprobe=nprobe, k=k, budget=budget,
-                   bound=bound, z=z, backend=backend)
+@partial(jax.jit, static_argnames=("mesh", "dim", "k", "budget", "bound",
+                                   "z", "backend", "front", "front_args"))
+def _sharded_search(mesh, queries, front_rep, codebook, trq_model, front_db,
+                    rec_db, *, dim: int, k: int, budget: int, bound: str,
+                    z: float, backend: str, front: str, front_args: tuple):
+    body = partial(_shard_body, dim=dim, k=k, budget=budget, bound=bound,
+                   z=z, backend=backend, front=front, front_args=front_args)
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P(), P(), P(), P(), P(AXIS)),
+                   in_specs=(P(), P(), P(), P(), P(AXIS), P(AXIS)),
                    out_specs=(P(), P(), P(AXIS)),
                    check_rep=False)
-    return fn(queries, centroids, codebook, trq_model, db)
+    return fn(queries, front_rep, codebook, trq_model, front_db, rec_db)
 
 
 # ---------------------------------------------------------------- executor
@@ -327,8 +536,9 @@ class ShardedExecutor:
     """Mesh-parallel staged search over a ShardedIndex.
 
     Bit-identical top-k to the unsharded ``SearchExecutor`` on the same
-    database (see module docstring for why), with per-shard QueryCost
-    ledgers folded under the parallel-shard overlap model.
+    database for BOTH fronts (see module docstring for why), with
+    per-shard QueryCost ledgers folded under the parallel-shard overlap
+    model.
     """
 
     sharded: ShardedIndex
@@ -342,15 +552,17 @@ class ShardedExecutor:
     # -- construction -----------------------------------------------------
 
     @classmethod
-    def from_index(cls, index, *, shards: int, backend: str = "reference",
-                   mesh=None, micro_batch: int | None = None,
+    def from_index(cls, index, *, shards: int, front: str = "ivf",
+                   backend: str = "reference", mesh=None,
+                   micro_batch: int | None = None,
                    refine_budget: int | None = None) -> "ShardedExecutor":
-        """Partition ``index`` into ``shards`` and place it on ``mesh``
-        (default: a fresh ``("search",)`` mesh over the first S devices)."""
+        """Partition ``index`` into ``shards`` for ``front`` and place it
+        on ``mesh`` (default: a fresh ``("search",)`` mesh over the first
+        S devices)."""
         if mesh is None:
             from repro.launch.mesh import make_search_mesh
             mesh = make_search_mesh(shards)
-        si = partition_database(index, shards).place(mesh)
+        si = partition_database(index, shards, front=front).place(mesh)
         return cls(sharded=si, backend=backend, micro_batch=micro_batch,
                    refine_budget=refine_budget)
 
@@ -365,17 +577,17 @@ class ShardedExecutor:
         cfg = si.config
         k = k or cfg.final_k
         budget = search_budget(cfg, k, self.refine_budget)
-        db = (si.list_gid, si.lists, si.pq_codes, si.trq.levels,
-              si.trq.scalars, si.x, si.gid)
+        rec_db = (si.pq_codes, si.trq.levels, si.trq.scalars, si.x, si.gid)
 
         topk_parts: list[jax.Array] = []
         dist_parts: list[jax.Array] = []
         counters: Counters = {}
         for chunk in iter_chunks(queries, self.micro_batch):
             topk, topk_d, cnt = _sharded_search(
-                si.mesh, chunk, si.centroids, si.codebook, si.trq.model, db,
-                dim=si.trq.dim, nprobe=cfg.nprobe, k=k, budget=budget,
-                bound=cfg.bound, z=cfg.z, backend=self.backend)
+                si.mesh, chunk, si.front_rep, si.codebook, si.trq.model,
+                si.front_db, rec_db, dim=si.trq.dim, k=k, budget=budget,
+                bound=cfg.bound, z=cfg.z, backend=self.backend,
+                front=si.front, front_args=si.front_args)
             topk_parts.append(topk)
             dist_parts.append(topk_d)
             _accumulate(counters, cnt)
@@ -395,8 +607,12 @@ class ShardedExecutor:
 
     def _fold(self, counters: Counters) -> QueryCost:
         """One host transfer: (S,)-stacked shard counters → S Table-I
-        ledgers → one parallel-folded QueryCost (max time, summed bytes)."""
+        ledgers → one parallel-folded QueryCost (max time, summed bytes).
+        The front's registered fold keeps per-front traffic models (IVF
+        coarse probe vs graph hop stream) consistent with the unsharded
+        stages."""
         si = self.sharded
+        front_fold = registry.sharded_front(si.front).fold
         names = list(counters)
         vals = jax.device_get([counters[n] for n in names])
 
@@ -405,24 +621,26 @@ class ShardedExecutor:
             counts = {n: int(v[s]) for n, v in zip(names, vals)}
             shard_costs.append(fold_counts(
                 counts, cost=None, config=si.config, layout=si.layout,
-                front_fold=fold_ivf_front_cost))
+                front_fold=front_fold))
         merged = shard_costs[0]
         for c in shard_costs[1:]:
             merged.merge_parallel(c)
         return merged
 
 
-def make_sharded_executor(index, *, shards: int, backend: str = "reference",
+def make_sharded_executor(index, *, shards: int, front: str = "ivf",
+                          backend: str = "reference",
                           micro_batch: int | None = None,
                           refine_budget: int | None = None, mesh=None
                           ) -> ShardedExecutor:
     """Memoized sharded-executor factory (facade entry point).
 
-    Partitioning + placement run once per (index, shards); executors are
-    additionally cached per (backend, micro_batch, refine_budget) so
-    ``anns.pipeline`` and ``serving`` can call this on every request.
+    Partitioning + placement run once per (index, shards, front);
+    executors are additionally cached per (backend, micro_batch,
+    refine_budget) so ``anns.pipeline`` and ``serving`` can call this on
+    every request.
     """
-    key = (shards, backend, micro_batch, refine_budget, mesh)
+    key = (shards, front, backend, micro_batch, refine_budget, mesh)
     cache = getattr(index, "_sharded_cache", None)
     if cache is None:
         cache = {}
@@ -431,15 +649,16 @@ def make_sharded_executor(index, *, shards: int, backend: str = "reference",
     if ex is None:
         si = None
         # share the partitioned+placed index only across entries with the
-        # SAME mesh request — a default (mesh=None) call must not silently
-        # adopt a custom-mesh placement and vice versa
-        for (sh, _b, _m, _rb, _mesh), other in cache.items():
-            if sh == shards and _mesh is mesh:
+        # SAME (shards, front, mesh) request — a default (mesh=None) call
+        # must not silently adopt a custom-mesh placement and vice versa
+        for (sh, _f, _b, _m, _rb, _mesh), other in cache.items():
+            if sh == shards and _f == front and _mesh is mesh:
                 si = other.sharded
                 break
         if si is None:
             ex = ShardedExecutor.from_index(index, shards=shards,
-                                            backend=backend, mesh=mesh,
+                                            front=front, backend=backend,
+                                            mesh=mesh,
                                             micro_batch=micro_batch,
                                             refine_budget=refine_budget)
         else:

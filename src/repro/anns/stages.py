@@ -21,10 +21,13 @@ host transfer per search call (see ``executor.py``).  Stages also own their
 traffic model via ``fold_cost`` so the executor stays backend-agnostic.
 
 The streaming subsystem (``anns.streaming``) reuses the same pieces: its
-generation-aware IVF front emits the extra ``delta_cand`` counter (delta-
-page candidates, billed to a distinct far-memory ledger entry) and both
-refine backends score base and delta rows in one candidate batch — the
-``Candidates``/``Refined`` contracts are unchanged.
+generation-aware fronts (base ∪ delta IVF probe, tombstone-aware graph
+traversal) emit the extra ``delta_cand`` counter (delta-row candidates,
+billed to a distinct far-memory ledger entry) and both refine backends
+score base and delta rows in one candidate batch — the
+``Candidates``/``Refined`` contracts are unchanged.  The sharded
+subsystem (``anns.sharding``) likewise inlines both fronts in its
+shard_map body through ``registry.ShardedFrontHooks``.
 """
 
 from __future__ import annotations
@@ -186,6 +189,18 @@ def _graph_candidates(neighbors, x_score, codebook, pq_codes, queries, *,
     return ids, valid, d0, jnp.asarray(nq * beam, jnp.int32)
 
 
+def fold_graph_front_cost(cost: QueryCost, counts: dict[str, int],
+                          layout: RecordLayout) -> None:
+    """Graph front traffic model: beam traversal decodes PQ codes of the
+    visited neighborhoods (``front_hops``), then the final beam is
+    ADC-scored (``front_cand``) — all fast-memory traffic.  Shared by
+    ``GraphFrontStage.fold_cost``, the per-shard fold in ``anns.sharding``
+    and the streaming graph front (``anns.streaming``), so the three
+    datapaths' ledgers cannot drift apart."""
+    cost.record("front", Tier.HBM, counts["front_hops"], layout.fast_bytes)
+    cost.record("coarse", Tier.HBM, counts["front_cand"], layout.fast_bytes)
+
+
 @dataclass
 class GraphFrontStage:
     """CAGRA-style beam search scored on PQ reconstructions.
@@ -220,12 +235,7 @@ class GraphFrontStage:
 
     def fold_cost(self, cost: QueryCost, counts: dict[str, int],
                   layout: RecordLayout) -> None:
-        # Beam traversal decodes PQ codes of visited neighborhoods, then the
-        # final beam is ADC-scored — all fast-memory traffic.
-        cost.record("front", Tier.HBM, counts["front_hops"],
-                    layout.fast_bytes)
-        cost.record("coarse", Tier.HBM, counts["front_cand"],
-                    layout.fast_bytes)
+        fold_graph_front_cost(cost, counts, layout)
 
 
 # ---------------------------------------------------------- refine backends
@@ -381,19 +391,28 @@ def _rerank_all(x, queries, ids, valid, *, k: int):
 # ----------------------------------------------- front factories + registry
 # Each front registers itself with the capability registry: supported index
 # layouts plus a per-layout stage factory.  ``anns.streaming`` attaches the
-# "streaming" factory for the IVF front when it is imported; the "sharded"
-# layout inlines its front in the shard_map body (``anns.sharding``), so it
-# is declared (capability-validated) but has no stage factory here.
+# "streaming" factories (base ∪ delta IVF, tombstone-aware graph) when it
+# is imported; the "sharded" layout inlines its fronts in the shard_map
+# body via ``registry.ShardedFrontHooks`` (``anns.sharding`` registers the
+# whole-list LPT partitioner for IVF and the vector-range + halo
+# partitioner for graph), so both fronts declare it here but register no
+# stage factory for it.
 
 
 def graph_for(index, *, degree: int = 16) -> graph_mod.GraphIndex:
-    """Build (once) and cache the kNN graph for an index's database.
-    The cache lives ON the index instance, so its lifetime is exactly the
-    index's lifetime — no process-global registry to leak."""
-    g = getattr(index, "_graph_cache", None)
+    """Build (once per degree) and cache the kNN graph for an index's
+    database.  The cache lives ON the index instance, so its lifetime is
+    exactly the index's lifetime — no process-global registry to leak.
+    Keyed by ``degree``: a degree-32 request must not silently return a
+    previously cached degree-16 graph."""
+    cache = getattr(index, "_graph_cache", None)
+    if not isinstance(cache, dict):      # also migrates the pre-dict cache
+        cache = {}
+        index._graph_cache = cache
+    g = cache.get(degree)
     if g is None:
         g = graph_mod.build(index.x, degree=degree)
-        index._graph_cache = g
+        cache[degree] = g
     return g
 
 
@@ -405,15 +424,17 @@ def make_ivf_front(index, **opts) -> IVFFrontStage:
                          pq_codes=index.pq_codes, nprobe=nprobe)
 
 
-def make_graph_front(index, *, graph_index=None, **opts) -> GraphFrontStage:
-    g = graph_index if graph_index is not None else graph_for(index)
+def make_graph_front(index, *, graph_index=None, degree: int = 16,
+                     **opts) -> GraphFrontStage:
+    g = graph_index if graph_index is not None \
+        else graph_for(index, degree=degree)
     return GraphFrontStage(graph=g, codebook=index.codebook,
                            pq_codes=index.pq_codes, **opts)
 
 
 registry.register_front("ivf", layouts=("static", "sharded", "streaming"),
                         make={"static": make_ivf_front})
-registry.register_front("graph", layouts=("static",),
+registry.register_front("graph", layouts=("static", "sharded", "streaming"),
                         make={"static": make_graph_front})
 registry.register_backend("reference", make=ReferenceRefineBackend)
 registry.register_backend("pallas", make=PallasRefineBackend)

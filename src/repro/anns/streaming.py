@@ -27,6 +27,19 @@ far-memory layout):
   reach refine/rerank).  Ids returned by ``search`` are stable GLOBAL ids
   (``row_gid``), monotonic across the index's lifetime.
 
+* **Graph front** — ``search(front="graph")`` runs the CAGRA-style beam
+  traversal over the mutable row store.  The adjacency is materialized
+  lazily on first graph search and then maintained ONLINE
+  (FreshDiskANN-style, ``index.graph``): ``insert`` wires each new row to
+  its beam-search neighborhood (forward edges) and into its neighbors'
+  reverse slots; ``delete`` leaves the graph alone — traversal routes
+  THROUGH tombstoned rows, the front just masks them out of the candidate
+  beam; ``compact()`` drops dead rows and patches edges through them with
+  a one-hop contraction.  Rows appended since the last compaction count as
+  ``delta_cand`` (their TRQ codes live in the delta region of far memory),
+  so the graph front bills the same ``delta:cxl`` ledger entry the IVF
+  base ∪ delta probe does.
+
 * **Compaction / rebalancing** — when the drift metric crosses a
   threshold (tombstone fraction, delta fraction, or — once a shard
   assignment exists — the stale assignment's max shard load exceeding a
@@ -65,9 +78,10 @@ from repro.anns import registry
 from repro.anns.executor import SearchExecutor
 from repro.anns.pipeline import FaTRQIndex, PipelineConfig
 from repro.anns.sharding import lpt_assign
-from repro.anns.stages import (Candidates, adc_score, fold_ivf_front_cost,
-                               rank_centroid_lists)
+from repro.anns.stages import (Candidates, adc_score, fold_graph_front_cost,
+                               fold_ivf_front_cost, rank_centroid_lists)
 from repro.core import trq as trq_mod
+from repro.index import graph as graph_mod
 from repro.index import ivf as ivf_mod
 from repro.memory import QueryCost
 from repro.quant import pq as pq_mod
@@ -142,6 +156,65 @@ class StreamingFrontStage:
         fold_ivf_front_cost(cost, counts, layout)
 
 
+@partial(jax.jit, static_argnames=("iters", "beam", "expand", "n_base"))
+def _graph_streaming_candidates(neighbors, x_score, codebook, pq_codes,
+                                alive, queries, *, iters: int, beam: int,
+                                expand: int, n_base: int):
+    """Tombstone-aware graph front: beam-search the maintained adjacency
+    (which still routes THROUGH dead rows), mask tombstones out of the
+    final beam, and count post-compaction rows as delta candidates."""
+    gidx = graph_mod.GraphIndex(neighbors=neighbors)
+    ids = jax.vmap(lambda q: graph_mod.search(gidx, x_score, q, iters=iters,
+                                              beam=beam, expand=expand))(
+        queries)                                              # (Q, beam)
+    valid = alive[ids]
+    d0 = adc_score(codebook, pq_codes[ids], queries, valid)
+    is_delta = ids >= n_base
+    return ids, valid, d0, jnp.sum(valid), jnp.sum(valid & is_delta)
+
+
+@dataclass
+class GraphStreamingFrontStage:
+    """``FrontStage`` running the CAGRA-style traversal over a mutable
+    generation: the online-maintained adjacency plus the alive bitmap.
+    Post-compaction (no tombstones, no delta rows) its candidate stream is
+    bit-identical to the static ``GraphFrontStage`` over ``rebuild_static``
+    given the same adjacency — same beam search, same ADC scoring — which
+    is exactly what the churn-equivalence pin tests."""
+
+    graph: graph_mod.GraphIndex
+    codebook: pq_mod.PQCodebook
+    pq_codes: jax.Array        # (n_rows, M) — sliced to the live store
+    alive: jax.Array           # (n_rows,) bool
+    n_base: int                # rows ≥ n_base were inserted post-compact
+    beam: int = 64
+    iters: int = 32
+    expand: int = 4
+    name: str = "graph"
+    x_score: jax.Array = None
+
+    def __post_init__(self):
+        if self.x_score is None:
+            self.x_score = pq_mod.decode(self.codebook, self.pq_codes)
+
+    def candidates(self, queries: jax.Array) -> Candidates:
+        ids, valid, d0, n_cand, n_delta = _graph_streaming_candidates(
+            self.graph.neighbors, self.x_score, self.codebook,
+            self.pq_codes, self.alive, queries, iters=self.iters,
+            beam=self.beam, expand=self.expand, n_base=self.n_base)
+        nq = queries.shape[0]
+        hops = jnp.asarray(nq * self.iters * self.expand * self.graph.degree,
+                           jnp.int32)
+        return Candidates(ids=ids, valid=valid, d0=d0,
+                          counters={"front_cand": n_cand,
+                                    "front_hops": hops,
+                                    "delta_cand": n_delta})
+
+    def fold_cost(self, cost: QueryCost, counts: dict[str, int],
+                  layout) -> None:
+        fold_graph_front_cost(cost, counts, layout)
+
+
 class StreamingIndex:
     """Mutable FaTRQ index: online inserts/deletes + drift-triggered
     compaction, searched through the existing refine backends.
@@ -192,6 +265,9 @@ class StreamingIndex:
         self.next_gid = n
         self.n_tombstones = 0
         self.generation = 0             # bumped on every mutation
+        self._n_base = n                # rows ≥ _n_base are delta (graph)
+        self._graph: np.ndarray | None = None   # lazily-built adjacency
+        self._graph_degree = 16
         self._gid_row: dict[int, int] = {i: i for i in range(n)}
         self._assignment: np.ndarray | None = None   # list → shard
         self._n_shards: int | None = None
@@ -326,6 +402,12 @@ class StreamingIndex:
         self.n_rows += b
         self.next_gid += b
 
+        # online graph maintenance: wire the new rows into the adjacency
+        # (only once a graph search has materialized it)
+        if self._graph is not None:
+            self._graph = graph_mod.insert_nodes(
+                self._graph, np.asarray(self.x[: self.n_rows]), start)
+
         # delta append: bucketize the batch by list, grow pages if needed
         counts = np.bincount(list_ids, minlength=self.nlist).astype(np.int32)
         need = int((self.delta_len + counts).max())
@@ -391,6 +473,8 @@ class StreamingIndex:
         and move with their rows.
         """
         folded, dropped = self.n_delta_rows, self.n_tombstones
+        x_old = np.asarray(self.x[: self.n_rows]) \
+            if self._graph is not None else None
         live_rows, list_ids = self._live_assignment()
         n_live = live_rows.size
         cap = int(3.0 * n_live / self.nlist) + 1
@@ -421,6 +505,12 @@ class StreamingIndex:
         self.delta_len = np.zeros((self.nlist,), np.int32)
         self.n_rows = n_live
         self.n_tombstones = 0
+        # graph maintenance: drop dead rows, patch edges through them with
+        # the one-hop contraction; all surviving rows are base again
+        if self._graph is not None:
+            self._graph = graph_mod.compact_graph(self._graph, x_old,
+                                                  live_rows)
+        self._n_base = n_live
         self._invalidate()
         return {"folded_delta_rows": folded, "dropped_tombstones": dropped,
                 "n_live": n_live}
@@ -491,6 +581,17 @@ class StreamingIndex:
 
     # ------------------------------------------------------------- search
 
+    def _graph_host(self) -> np.ndarray:
+        """The online-maintained adjacency over rows ``0..n_rows`` —
+        including tombstoned rows (traversal routes through them until the
+        next compaction).  Built once from the current row store on first
+        graph search; ``insert``/``compact`` keep it wired incrementally
+        from then on (never rebuilt)."""
+        if self._graph is None:
+            self._graph = np.asarray(graph_mod.build(
+                self.x[: self.n_rows], degree=self._graph_degree).neighbors)
+        return self._graph
+
     def _dev(self) -> dict:
         if self._dev_cache is None or \
                 self._dev_cache["gen"] != self.generation:
@@ -504,21 +605,24 @@ class StreamingIndex:
         return self._dev_cache
 
     def execute(self, queries: jax.Array, *, k: int | None = None,
-                backend: str | None = None, micro_batch: int | None = None,
+                front: str | None = None, backend: str | None = None,
+                micro_batch: int | None = None,
                 refine_budget: int | None = None,
                 cost: QueryCost | None = None, shards: int | None = None
                 ) -> tuple[jax.Array, jax.Array, QueryCost]:
         """Generation-aware FaTRQ search → (Q, k) GLOBAL ids, (Q, k) exact
         squared-L2 distances, and the traffic ledger.
 
-        The IVF front probes base ∪ delta lists and masks tombstones; both
-        refine backends score base and delta rows under one QueryCost
-        (delta traffic on its own ``delta:cxl`` entry).  ``shards`` routes
-        a static snapshot through ``anns.sharding`` and maps the results
-        back to global ids.
+        The IVF front probes base ∪ delta lists and masks tombstones; the
+        graph front beam-searches the online-maintained adjacency with the
+        same masking.  Both refine backends score base and delta rows under
+        one QueryCost (delta traffic on its own ``delta:cxl`` entry).
+        ``shards`` routes a static snapshot through ``anns.sharding`` (with
+        the requested front) and maps the results back to global ids.
         """
         cfg = self.config
         k = k or cfg.final_k
+        front = front or "ivf"
         backend = backend or cfg.backend
         micro_batch = micro_batch if micro_batch is not None \
             else cfg.micro_batch
@@ -526,43 +630,47 @@ class StreamingIndex:
         if shards is not None:
             from repro.anns.sharding import make_sharded_executor
             idx, gid = self.rebuild_static()
-            sx = make_sharded_executor(idx, shards=shards, backend=backend,
+            sx = make_sharded_executor(idx, shards=shards, front=front,
+                                       backend=backend,
                                        micro_batch=micro_batch,
                                        refine_budget=refine_budget)
             ids, dists, scost = sx.execute(queries, k=k, cost=cost)
             return jnp.asarray(gid)[ids], dists, scost
 
         dev = self._dev()
-        ex = self._executor(backend, micro_batch, dev,
+        ex = self._executor(front, backend, micro_batch, dev,
                             refine_budget=refine_budget)
         rows, dists, out_cost = ex.execute(queries, k=k, cost=cost)
         return dev["row_gid"][rows], dists, out_cost
 
     def search(self, queries: jax.Array, *, k: int | None = None,
-               backend: str | None = None, micro_batch: int | None = None,
+               front: str | None = None, backend: str | None = None,
+               micro_batch: int | None = None,
                cost: QueryCost | None = None, shards: int | None = None
                ) -> tuple[jax.Array, QueryCost]:
         """Legacy tuple surface over ``execute`` (no distances)."""
-        ids, _, out_cost = self.execute(queries, k=k, backend=backend,
+        ids, _, out_cost = self.execute(queries, k=k, front=front,
+                                        backend=backend,
                                         micro_batch=micro_batch, cost=cost,
                                         shards=shards)
         return ids, out_cost
 
-    def _executor(self, backend: str, micro_batch: int | None, dev: dict,
+    def _executor(self, front: str, backend: str, micro_batch: int | None,
+                  dev: dict,
                   refine_budget: int | None = None) -> SearchExecutor:
         """Plain ``SearchExecutor`` over the current generation — the
-        streaming front satisfies the ``FrontStage`` protocol and
+        streaming fronts satisfy the ``FrontStage`` protocol and
         ``StreamingIndex`` quacks like a ``FaTRQIndex`` (``config``,
         ``layout``, ``trq``, ``x``), so search/fold logic lives in ONE
         place.  Front and backend come from the capability registry
-        (``anns.registry``); cached per (generation, backend, micro_batch,
-        refine_budget)."""
-        key = (dev["gen"], backend, micro_batch, refine_budget)
+        (``anns.registry``); cached per (generation, front, backend,
+        micro_batch, refine_budget)."""
+        key = (dev["gen"], front, backend, micro_batch, refine_budget)
         ex = self._ex_cache.get(key)
         if ex is not None:
             return ex
         be = registry.make_backend(backend)
-        fs = registry.make_front("ivf", "streaming", self)
+        fs = registry.make_front(front, "streaming", self)
         ex = SearchExecutor(index=self, front=fs, backend=be,
                             micro_batch=micro_batch,
                             refine_budget=refine_budget)
@@ -575,8 +683,9 @@ class StreamingIndex:
 
 
 # ----------------------------------------------------- registry integration
-# The IVF front declares streaming support in ``anns.stages``; the factory
-# building its base ∪ delta physical variant lives here, next to the stage.
+# Both fronts declare streaming support in ``anns.stages``; the factories
+# building their generation-aware physical variants live here, next to the
+# stages.
 
 
 def make_streaming_front(st: StreamingIndex, **opts) -> StreamingFrontStage:
@@ -590,4 +699,21 @@ def make_streaming_front(st: StreamingIndex, **opts) -> StreamingFrontStage:
         alive=dev["alive"], nprobe=nprobe)
 
 
+def make_streaming_graph_front(st: StreamingIndex,
+                               **opts) -> GraphStreamingFrontStage:
+    """Materialize (or reuse) the online-maintained adjacency and bind the
+    current generation's alive bitmap + delta boundary to the stage."""
+    degree = opts.pop("degree", st._graph_degree)
+    if degree != st._graph_degree and st._graph is not None:
+        raise ValueError(f"streaming graph was materialized at degree "
+                         f"{st._graph_degree}, cannot serve degree {degree}")
+    st._graph_degree = degree
+    nb = st._graph_host()
+    return GraphStreamingFrontStage(
+        graph=graph_mod.GraphIndex(neighbors=jnp.asarray(nb)),
+        codebook=st.codebook, pq_codes=st.pq_codes[: st.n_rows],
+        alive=jnp.asarray(st.alive[: st.n_rows]), n_base=st._n_base, **opts)
+
+
 registry.add_front_factory("ivf", "streaming", make_streaming_front)
+registry.add_front_factory("graph", "streaming", make_streaming_graph_front)

@@ -5,6 +5,20 @@ CAGRA's NN-descent converges to the same neighborhood structure) with a
 rank-based pruning pass for diversity.  Search: batched greedy best-first
 beam search with a fixed iteration budget — jit-able (no data-dependent
 control flow: every iteration expands the best unvisited beam entry).
+
+The per-iteration beam step is split into two shared helpers —
+``pick_frontier`` (select the best unexpanded slots) and ``beam_merge``
+(dedup + keep the ``beam`` best) — so the sharded traversal in
+``anns.sharding`` can interleave a cross-shard frontier exchange between
+them while staying BIT-IDENTICAL to this single-device search: both paths
+run the exact same dedup/tie-breaking ops on the exact same values.
+
+Online maintenance (FreshDiskANN-style, used by ``anns.streaming``):
+``insert_nodes`` wires freshly appended vectors into an existing graph
+(beam-search neighborhood → forward edges, replace-worst reverse edges);
+deletes are tombstones at the search layer (traversal routes THROUGH dead
+nodes); ``compact_graph`` drops dead rows at compaction time and patches
+edges through them with a one-hop contraction.
 """
 
 from __future__ import annotations
@@ -45,18 +59,27 @@ def build(x: jax.Array, degree: int = 16) -> GraphIndex:
 
     neighbors = np.full((n, degree), -1, np.int32)
     neighbors[:, :fwd] = pruned[:, :fwd]
-    # reverse edges: j appears in i's reverse list if i ∈ knn(j)
-    fill = np.full((n,), fwd, np.int32)
-    for j in range(n):
-        for i in pruned[j, :fwd]:
-            if fill[i] < degree:
-                neighbors[i, fill[i]] = j
-                fill[i] += 1
+    # reverse edges: j appears in i's reverse list if i ∈ knn(j), taken in
+    # (j, rank) order with at most degree-fwd accepted per target — a
+    # stable argsort over the flattened edge list groups edges by target
+    # while preserving exactly that order, so the scatter fills the same
+    # slots the old per-edge Python loop did.
+    targets = pruned[:, :fwd].reshape(-1)
+    sources = np.repeat(np.arange(n), fwd).astype(np.int32)
+    by_tgt = np.argsort(targets, kind="stable")
+    t_sorted, s_sorted = targets[by_tgt], sources[by_tgt]
+    first = np.r_[True, t_sorted[1:] != t_sorted[:-1]]
+    grp_start = np.maximum.accumulate(
+        np.where(first, np.arange(t_sorted.size), 0))
+    rank = np.arange(t_sorted.size) - grp_start
+    take = rank < degree - fwd
+    neighbors[t_sorted[take], fwd + rank[take]] = s_sorted[take]
+    fill = fwd + np.minimum(np.bincount(targets, minlength=n), degree - fwd)
     # pad any remaining -1 with forward edges
-    for i in range(n):
-        k = fill[i]
-        if k < degree:
-            neighbors[i, k:] = pruned[i, fwd:fwd + (degree - k)]
+    cols = np.arange(degree)[None, :]
+    src = np.clip(fwd + cols - fill[:, None], 0, degree - 1)
+    pad = np.take_along_axis(pruned, src, axis=1)
+    neighbors = np.where(cols >= fill[:, None], pad, neighbors)
     # long-range shortcuts: kNN graphs over clustered data decompose into
     # per-cluster components; two random edges per node make the graph an
     # expander so beam search can escape a wrong-cluster basin (plays the
@@ -64,7 +87,43 @@ def build(x: jax.Array, degree: int = 16) -> GraphIndex:
     rng = np.random.default_rng(7)
     shortcuts = rng.integers(0, n, size=(n, 2))
     neighbors[:, degree - 2:] = shortcuts
-    return GraphIndex(neighbors=jnp.asarray(neighbors))
+    return GraphIndex(neighbors=jnp.asarray(neighbors.astype(np.int32)))
+
+
+# ------------------------------------------------------- beam-step helpers
+
+
+def pick_frontier(ds: jax.Array, expanded: jax.Array, *, expand: int
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Select the ``expand`` best unexpanded beam slots.
+    Returns (picked slot indices, updated expanded mask)."""
+    cand_score = jnp.where(expanded, jnp.inf, ds)
+    _, picks = jax.lax.top_k(-cand_score, expand)
+    return picks, expanded.at[picks].set(True)
+
+
+def beam_merge(ids: jax.Array, ds: jax.Array, expanded: jax.Array,
+               new_ids: jax.Array, new_d: jax.Array, *, beam: int
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Merge expansion results into the beam: concat [beam, new], penalize
+    duplicate ids so the first occurrence (the beam copy carrying its
+    ``expanded`` flag) survives, keep the ``beam`` smallest.
+
+    This is THE bit-level beam-update contract: the sharded frontier
+    exchange calls it on the psum'd neighbor lists, so its dedup order and
+    ``top_k`` tie-breaking match the single-device search exactly.
+    """
+    all_ids = jnp.concatenate([ids, new_ids])
+    all_d = jnp.concatenate([ds, new_d])
+    all_exp = jnp.concatenate([expanded, jnp.zeros(new_ids.shape, bool)])
+    sort_ids = jnp.argsort(all_ids, stable=True)
+    sorted_ids = all_ids[sort_ids]
+    dup = jnp.concatenate([jnp.array([False]),
+                           sorted_ids[1:] == sorted_ids[:-1]])
+    dup_in_orig = jnp.zeros_like(dup).at[sort_ids].set(dup)
+    all_d = jnp.where(dup_in_orig, jnp.inf, all_d)
+    _, keep = jax.lax.top_k(-all_d, beam)
+    return all_ids[keep], all_d[keep], all_exp[keep]
 
 
 @partial(jax.jit, static_argnames=("iters", "beam", "expand"))
@@ -89,27 +148,11 @@ def search(index: GraphIndex, x: jax.Array, q: jax.Array, *, iters: int = 24,
 
     def body(carry, _):
         ids, ds, expanded = carry
-        # pick `expand` best unexpanded beam entries
-        cand_score = jnp.where(expanded, jnp.inf, ds)
-        _, picks = jax.lax.top_k(-cand_score, expand)
-        expanded = expanded.at[picks].set(True)
+        picks, expanded = pick_frontier(ds, expanded, expand=expand)
         neigh = index.neighbors[ids[picks]].reshape(-1)       # (E·degree,)
         neigh = jnp.maximum(neigh, 0)
         nd = dist(neigh)
-        all_ids = jnp.concatenate([ids, neigh])
-        all_d = jnp.concatenate([ds, nd])
-        all_exp = jnp.concatenate([expanded,
-                                   jnp.zeros_like(nd, bool)])
-        # dedup: penalize repeated ids so they sort last (first occurrence —
-        # the beam copy carrying its `expanded` flag — survives)
-        sort_ids = jnp.argsort(all_ids, stable=True)
-        sorted_ids = all_ids[sort_ids]
-        dup = jnp.concatenate([jnp.array([False]),
-                               sorted_ids[1:] == sorted_ids[:-1]])
-        dup_in_orig = jnp.zeros_like(dup).at[sort_ids].set(dup)
-        all_d = jnp.where(dup_in_orig, jnp.inf, all_d)
-        _, keep = jax.lax.top_k(-all_d, beam)
-        return (all_ids[keep], all_d[keep], all_exp[keep]), None
+        return beam_merge(ids, ds, expanded, neigh, nd, beam=beam), None
 
     (beam_ids, beam_d, _), _ = jax.lax.scan(
         body, (beam_ids, beam_d, visited_mask), None, length=iters)
@@ -120,3 +163,96 @@ def search(index: GraphIndex, x: jax.Array, q: jax.Array, *, iters: int = 24,
 def search_batch(index: GraphIndex, x: jax.Array, qs: jax.Array,
                  *, iters: int = 24, beam: int = 64) -> jax.Array:
     return jax.vmap(lambda q: search(index, x, q, iters=iters, beam=beam))(qs)
+
+
+# ----------------------------------------------------- online maintenance
+
+
+def insert_nodes(neighbors, x, n_old: int, *, iters: int = 32,
+                 beam: int = 64, expand: int = 4):
+    """Wire rows ``n_old:`` of ``x`` into an existing graph online
+    (FreshDiskANN-style RobustInsert adapted to the fixed-degree layout).
+
+    Each new node beam-searches the PRE-BATCH graph and takes its `degree`
+    nearest beam entries as forward edges; reverse edges replace the
+    target's current worst edge when the new node is closer, and the single
+    NEAREST neighbor always accepts one reverse edge so every inserted node
+    is reachable immediately (no rebuild, no edge ever dangles).  Returns
+    the grown (n, degree) int32 adjacency.  Deterministic: new nodes are
+    wired in row order with the same seed the static build's search uses.
+    """
+    import numpy as np
+
+    nb = np.asarray(neighbors)
+    x_np = np.asarray(x, np.float32)
+    n, degree = x_np.shape[0], nb.shape[1]
+    b = n - n_old
+    if b <= 0:
+        return nb.astype(np.int32)
+    if nb.shape[0] != n_old:
+        raise ValueError(f"adjacency covers {nb.shape[0]} rows but "
+                         f"n_old={n_old}")
+    gidx = GraphIndex(neighbors=jnp.asarray(nb))
+    x_old = jnp.asarray(x_np[:n_old])
+    beams = np.asarray(jax.vmap(
+        lambda q: search(gidx, x_old, q, iters=iters, beam=beam,
+                         expand=expand))(jnp.asarray(x_np[n_old:])))
+
+    out = np.concatenate([nb, np.zeros((b, degree), np.int32)])
+    for t in range(b):
+        row = n_old + t
+        fwd = beams[t, :degree].astype(np.int32)
+        out[row] = fwd
+        d_new = np.sum((x_np[fwd] - x_np[row]) ** 2, axis=-1)
+        for j, tgt in enumerate(fwd.tolist()):
+            if row in out[tgt]:
+                continue
+            cur_d = np.sum((x_np[out[tgt]] - x_np[tgt]) ** 2, axis=-1)
+            worst = int(np.argmax(cur_d))
+            if j == 0 or d_new[j] < cur_d[worst]:
+                out[tgt, worst] = row
+    return out.astype(np.int32)
+
+
+def compact_graph(neighbors, x, live_rows):
+    """Drop dead rows at compaction time and patch edges through them.
+
+    ``live_rows`` (ascending old row ids) defines the old→new renumbering.
+    Surviving edges are remapped directly; an edge into a dead node is
+    replaced by a one-hop contraction — the dead node's own nearest live
+    neighbor (ranked by distance to the edge's source), skipping rows the
+    source already links to.  If contraction finds nothing (all of the dead
+    node's neighborhood is dead or already linked), the source's first live
+    edge is duplicated — a redundant edge is harmless to beam search, a -1
+    would not be.  Returns the (n_live, degree) int32 adjacency.
+    """
+    import numpy as np
+
+    nb = np.asarray(neighbors)
+    x_np = np.asarray(x, np.float32)
+    live_rows = np.asarray(live_rows)
+    n_live = live_rows.size
+    if n_live == 0:
+        raise ValueError("cannot compact a graph to zero live rows")
+    new_of = np.full(nb.shape[0], -1, np.int32)
+    new_of[live_rows] = np.arange(n_live, dtype=np.int32)
+    out = new_of[nb[live_rows]]                    # -1 marks dead targets
+    for r in np.nonzero((out < 0).any(axis=1))[0]:
+        src_old = live_rows[r]
+        row = out[r]
+        have = set(row[row >= 0].tolist())
+        for c in np.nonzero(row < 0)[0]:
+            dead_old = nb[src_old, c]
+            cand = new_of[nb[dead_old]]
+            cand = cand[(cand >= 0) & (cand != r)]
+            by_d = np.argsort(np.sum(
+                (x_np[live_rows[cand]] - x_np[src_old]) ** 2, axis=-1),
+                kind="stable")
+            pick = next((int(c2) for c2 in cand[by_d]
+                         if int(c2) not in have), -1)
+            if pick < 0:
+                pick = int(row[row >= 0][0]) if have else (r + 1) % n_live
+            row[c] = pick
+            have.add(pick)
+        out[r] = row
+    return out.astype(np.int32)

@@ -72,10 +72,11 @@ class Retriever:
 
     The per-field knobs (``front``/``backend``/``micro_batch``/``shards``)
     are the legacy surface and become the default plan; pass ``plan=`` to
-    override them wholesale.  The plan is validated once against the
-    capability registry (unsupported combinations — e.g. the graph front
-    on a sharded or streaming index — raise ``anns.PlanError`` at plan
-    time) and compiled once into an executor cached per (index
+    override them wholesale.  Both registered fronts (IVF and graph) run
+    on every index layout; the plan is still validated once against the
+    capability registry (invalid plans — unknown names, a shard count or
+    front mismatching a wrapped ``ShardedIndex`` — raise ``anns.PlanError``
+    at plan time) and compiled once into an executor cached per (index
     generation, plan): repeated ``retrieve`` calls reuse it, and a
     ``StreamingIndex``'s ``insert``/``delete``/``compact``/``rebalance``
     generation bumps invalidate it, including the sharded snapshot behind

@@ -64,9 +64,9 @@ def _brute_dists(ds, queries, ids):
 
 class TestPlanValidation:
     def test_full_capability_matrix(self, index, streaming):
-        # every registered front × backend × layout either resolves or
-        # raises PlanError — today "ivf" runs everywhere and "graph" is
-        # static-only (no sharded frontier exchange, no online edges)
+        # the matrix is CLOSED: every registered front × backend × layout
+        # resolves without PlanError (both fronts run everywhere since the
+        # sharded frontier exchange + online edge insertion landed)
         targets = {"static": (Database.wrap(index), None),
                    "sharded": (Database.wrap(index), 1),
                    "streaming": (Database.wrap(streaming), None)}
@@ -75,26 +75,31 @@ class TestPlanValidation:
                 for layout, (db, shards) in targets.items():
                     plan = QueryPlan(front=front, backend=backend,
                                      shards=shards)
-                    supported = front == "ivf" or layout == "static"
-                    if supported:
-                        rp = db.validate(plan)
-                        assert rp.front == front
-                        assert rp.backend == backend
-                    else:
-                        with pytest.raises(PlanError) as ei:
-                            db.validate(plan)
-                        msg = str(ei.value)
-                        # the error names the unsupported (front, layout)
-                        # pair and what the layout does support
-                        assert f"front {front!r}" in msg
-                        assert f"{layout!r} index layout" in msg
-                        assert "IVF front only" in msg
+                    rp = db.validate(plan)
+                    assert rp.front == front
+                    assert rp.backend == backend
+
+    def test_pair_error_names_the_pair(self, index):
+        # a front artificially restricted to one layout still produces the
+        # structured capability error naming the (front, layout) pair
+        from repro.anns import registry as reg
+        reg.register_front("probe_only", layouts=("static",))
+        try:
+            with pytest.raises(PlanError) as ei:
+                Database.wrap(index).validate(
+                    QueryPlan(front="probe_only", shards=1))
+            msg = str(ei.value)
+            assert "front 'probe_only'" in msg
+            assert "'sharded' index layout" in msg
+            assert "GRAPH/IVF front" in msg
+        finally:
+            reg._FRONTS.pop("probe_only", None)
 
     def test_raises_at_plan_time_not_mid_search(self, index):
         # queries=None would explode inside any stage — PlanError must fire
         # before the executor ever sees them
         with pytest.raises(PlanError):
-            Database.wrap(index).query(None, plan=QueryPlan(front="graph",
+            Database.wrap(index).query(None, plan=QueryPlan(front="lsh",
                                                             shards=1))
 
     def test_unknown_names(self, index):
@@ -125,11 +130,11 @@ class TestPlanValidation:
                                                     mode="baseline"))
 
     def test_shims_raise_plan_error(self, ds, index, streaming):
-        with pytest.raises(PlanError, match="IVF front"):
-            search(index, ds.queries, shards=1, front="graph")
-        with pytest.raises(PlanError, match="ivf"):
-            Retriever(index=streaming, front="graph").retrieve(ds.queries,
-                                                               k=5)
+        with pytest.raises(PlanError, match="front"):
+            search(index, ds.queries, shards=1, front="lsh")
+        with pytest.raises(PlanError, match="front"):
+            Retriever(index=streaming, front="lsh").retrieve(ds.queries,
+                                                             k=5)
 
     def test_wrapped_sharded_index_pins_shard_count(self, ds, index):
         from repro.launch.mesh import make_search_mesh
@@ -140,7 +145,9 @@ class TestPlanValidation:
         assert jnp.array_equal(res.ids, a)
         with pytest.raises(PlanError, match="partitioned"):
             sdb.validate(QueryPlan(shards=2))
-        with pytest.raises(PlanError, match="IVF front"):
+        # a wrapped partition serves the front it was cut for — asking for
+        # the other front names the mismatch, not a capability violation
+        with pytest.raises(PlanError, match="re-partition"):
             sdb.validate(QueryPlan(front="graph"))
 
 

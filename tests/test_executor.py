@@ -160,3 +160,124 @@ class TestCostFlow:
         assert cost.ledger["refine:cxl"].accesses == \
             cost.ledger["coarse:hbm"].accesses
         assert cost.ledger["rerank:ssd"].accesses <= 40 * ds.queries.shape[0]
+
+
+class TestGraphPrimitives:
+    """index/graph.py building blocks: the vectorized build against a
+    per-edge reference loop, the per-degree graph cache, and the online
+    maintenance ops (insert_nodes / compact_graph) the streaming layer
+    relies on."""
+
+    @staticmethod
+    def _build_reference(x, degree):
+        """graph.build's algorithm with per-edge Python loops: same kNN
+        pruning, same (source, rank) reverse-edge acceptance order, same
+        forward-edge padding and shortcut rng — the spec the vectorized
+        scatter must reproduce bit for bit."""
+        from repro.data.synthetic import brute_force_topk
+
+        n = x.shape[0]
+        fwd = int(degree * 3 / 4)
+        knn = np.asarray(brute_force_topk(x, x, degree + 1))
+        mask = knn != np.arange(n)[:, None]
+        order = np.argsort(~mask, axis=1, kind="stable")
+        pruned = np.take_along_axis(knn, order, axis=1)[:, :degree]
+        neighbors = np.full((n, degree), -1, np.int32)
+        neighbors[:, :fwd] = pruned[:, :fwd]
+        fill = np.full(n, fwd)
+        for i in range(n):                      # reverse edges, edge order
+            for j in pruned[i, :fwd]:
+                if fill[j] < degree:
+                    neighbors[j, fill[j]] = i
+                    fill[j] += 1
+        for i in range(n):                      # pad with forward edges
+            for c in range(fill[i], degree):
+                neighbors[i, c] = pruned[i, min(fwd + c - fill[i],
+                                                degree - 1)]
+        rng = np.random.default_rng(7)
+        neighbors[:, degree - 2:] = rng.integers(0, n, size=(n, 2))
+        return neighbors.astype(np.int32)
+
+    def test_vectorized_build_matches_reference_loop(self):
+        from repro.index import graph as graph_mod
+
+        x = jax.random.normal(jax.random.PRNGKey(11), (400, 16))
+        got = np.asarray(graph_mod.build(x, degree=8).neighbors)
+        want = self._build_reference(x, 8)
+        np.testing.assert_array_equal(got, want)
+
+    def test_graph_for_caches_per_degree(self, index):
+        from repro.anns.stages import graph_for
+
+        g16 = graph_for(index)
+        assert graph_for(index) is g16             # cache hit
+        g8 = graph_for(index, degree=8)
+        assert g8 is not g16                       # degree keys the cache
+        assert g8.neighbors.shape == (index.x.shape[0], 8)
+        assert graph_for(index, degree=8) is g8
+        assert graph_for(index, degree=16) is g16  # earlier entry survives
+
+    def test_insert_nodes_invariants(self, ds):
+        from repro.index import graph as graph_mod
+
+        x = np.asarray(ds.x[:500], np.float32)
+        n_old, n = 460, 500
+        g0 = np.asarray(graph_mod.build(x[:n_old], degree=8).neighbors)
+        g1 = graph_mod.insert_nodes(g0, x, n_old)
+        assert g1.shape == (n, 8) and g1.dtype == np.int32
+        assert (g1 >= 0).all() and (g1 < n).all()
+        # new rows were wired against the PRE-batch graph: their forward
+        # edges can only point at pre-existing rows
+        assert (g1[n_old:] < n_old).all()
+        # pre-batch rows change only by reverse-edge replacement, and a
+        # replaced slot always points at an inserted row
+        changed = g1[:n_old] != g0
+        assert (g1[:n_old][changed] >= n_old).all()
+        # deterministic: same inputs, same adjacency
+        np.testing.assert_array_equal(g1, graph_mod.insert_nodes(g0, x,
+                                                                 n_old))
+
+    def test_insert_single_node_gets_reverse_edge(self, ds):
+        from repro.index import graph as graph_mod
+
+        x = np.asarray(ds.x[:301], np.float32)
+        g0 = np.asarray(graph_mod.build(x[:300], degree=8).neighbors)
+        g1 = graph_mod.insert_nodes(g0, x, 300)
+        # the j==0 reverse edge is unconditional, so a freshly inserted
+        # node is immediately reachable from its nearest beam hit
+        assert (g1[:300] == 300).any()
+
+    def test_insert_nodes_rejects_wrong_n_old(self, ds):
+        from repro.index import graph as graph_mod
+
+        x = np.asarray(ds.x[:300], np.float32)
+        g0 = np.asarray(graph_mod.build(x[:290], degree=8).neighbors)
+        with pytest.raises(ValueError, match="n_old"):
+            graph_mod.insert_nodes(g0, x, 280)
+
+    def test_compact_graph_invariants(self, ds):
+        from repro.index import graph as graph_mod
+
+        x = np.asarray(ds.x[:400], np.float32)
+        g = np.asarray(graph_mod.build(x, degree=8).neighbors)
+        dead = np.arange(50, 130)
+        live = np.setdiff1d(np.arange(400), dead)
+        out = graph_mod.compact_graph(g, x, live)
+        assert out.shape == (live.size, 8) and out.dtype == np.int32
+        # no dangling edges: everything points at a live, renumbered row
+        assert (out >= 0).all() and (out < live.size).all()
+        # rows whose edges were all live are a pure renumbering
+        new_of = np.full(400, -1, np.int32)
+        new_of[live] = np.arange(live.size, dtype=np.int32)
+        direct = new_of[g[live]]
+        untouched = (direct >= 0).all(axis=1)
+        assert untouched.any()
+        np.testing.assert_array_equal(out[untouched], direct[untouched])
+
+    def test_compact_graph_rejects_empty(self, ds):
+        from repro.index import graph as graph_mod
+
+        x = np.asarray(ds.x[:50], np.float32)
+        g = np.asarray(graph_mod.build(x, degree=8).neighbors)
+        with pytest.raises(ValueError, match="zero live rows"):
+            graph_mod.compact_graph(g, x, np.array([], np.int64))

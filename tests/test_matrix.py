@@ -1,0 +1,73 @@
+"""The closed capability matrix, executed end-to-end.
+
+Iterates every registered (front, layout, backend) triple straight from
+``anns.registry`` — NOT a hardcoded list, so a future front/backend lands
+in this sweep automatically — plans it through ``Database``/``QueryPlan``,
+and runs a real query: no ``PlanError``, non-empty ids, finite distances.
+This is the guard that keeps the matrix from silently reopening (a front
+dropping a layout from its declaration fails here before any subsystem
+test notices).
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.anns import (Database, PipelineConfig, QueryPlan, StreamingConfig,
+                        StreamingIndex, build, registry)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    from repro.data import make_dataset
+    return make_dataset(jax.random.PRNGKey(0), n=1500, d=32, n_queries=6,
+                        k_gt=20, clusters=8)
+
+
+@pytest.fixture(scope="module")
+def index(ds):
+    cfg = PipelineConfig(dim=32, pq_m=4, pq_k=32, nlist=16, nprobe=4,
+                         final_k=5, refine_budget=20)
+    return build(jax.random.PRNGKey(1), ds.x, cfg)
+
+
+@pytest.fixture(scope="module")
+def streaming(index):
+    return StreamingIndex(index, StreamingConfig(auto_compact=False))
+
+
+def _triples():
+    return list(itertools.product(registry.front_names(),
+                                  registry.LAYOUTS,
+                                  registry.backend_names()))
+
+
+def test_matrix_is_closed():
+    """Every registered front and backend declares every layout."""
+    for name in registry.front_names():
+        assert registry.front_spec(name).layouts == registry.LAYOUTS, name
+    for name in registry.backend_names():
+        assert registry.backend_spec(name).layouts == registry.LAYOUTS, name
+
+
+@pytest.mark.parametrize("front,layout,backend", _triples())
+def test_every_triple_plans_and_runs(ds, index, streaming, front, layout,
+                                     backend):
+    if layout == "streaming":
+        db, shards = Database.wrap(streaming), None
+    elif layout == "sharded":
+        db, shards = Database.wrap(index), 1
+    else:
+        db, shards = Database.wrap(index), None
+    plan = QueryPlan(front=front, backend=backend, shards=shards, k=5)
+    rp = db.validate(plan)                 # no PlanError
+    assert (rp.front, rp.backend) == (front, backend)
+    res = db.query(ds.queries, plan=plan)
+    ids = np.asarray(res.ids)
+    assert ids.shape == (ds.queries.shape[0], 5)
+    assert (ids >= 0).all()
+    assert np.isfinite(np.asarray(res.distances)).all()
+    assert res.cost.ledger, "search must bill a non-empty traffic ledger"
