@@ -1,17 +1,82 @@
 """Kernel micro-benchmarks (interpret mode on CPU — correctness-path
 timing; real TPU timing comes from the roofline analysis) + the kernel's
 HBM-traffic advantage, which is hardware-independent arithmetic.
+
+Covers the single-query and batched level-0 kernels, the fused persistent
+multi-level kernel vs the pre-fusion datapath it replaced (level-0 kernel
++ pure-jnp deeper levels with HBM round-trips between levels), and a
+``block_c`` autotune sweep over the fused kernel.
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, time_call
-from repro.core.packing import pack_ternary, packed_size
-from repro.core.ternary import ternary_encode
-from repro.kernels.ops import adc_scores, refine_scores
+from benchmarks.common import emit, time_call, write_json
+from repro.core import trq as trq_mod
+from repro.core.packing import pack_ternary, packed_size, unpack_ternary
+from repro.core.ternary import ternary_encode, ternary_inner
+from repro.kernels.ops import (adc_scores, fused_refine_scores_batch,
+                               refine_scores, refine_scores_batch)
+
+
+def _trq_problem(nq: int, c: int, d: int, levels: int):
+    """Calibrated multi-level refine inputs in the fused wrapper's layout."""
+    key = jax.random.PRNGKey(0)
+    kx, kc, kq, kcal, kp = jax.random.split(key, 5)
+    x = jax.random.normal(kx, (c, d))
+    cents = jax.random.normal(kc, (16, d))
+    assign = jnp.argmin(jnp.sum((x[:, None] - cents[None]) ** 2, -1), -1)
+    x_c = cents[assign]
+    codes, _ = trq_mod.encode_database(x, x_c, num_levels=levels)
+    qcal = jax.random.normal(kcal, (64, d))
+    pair = jax.random.randint(kp, (64,), 0, c)
+    codes = trq_mod.calibrate(codes, qcal, x, x_c, pair)
+    qs = jax.random.normal(kq, (nq, d))
+    ids = jnp.broadcast_to(jnp.arange(c)[None], (nq, c))
+    valid = jnp.ones((nq, c), bool)
+    d0 = jnp.sum((x_c[ids] - qs[:, None]) ** 2, -1)
+    sc = codes.scalars
+    return (codes, (jnp.stack([lv.packed[ids] for lv in codes.levels]), qs,
+                    d0, sc.delta_sq[ids], sc.cross[ids], sc.norm[ids],
+                    sc.rho[ids], valid, jnp.zeros_like(valid),
+                    jnp.stack([lv.proj[ids] for lv in codes.levels]),
+                    jnp.stack([lv.norm[ids] for lv in codes.levels]),
+                    jnp.stack([lv.rho[ids] for lv in codes.levels]),
+                    codes.model.w, codes.model.bias, codes.model.resid_std,
+                    3.0))
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_c", "dim"))
+def _prefusion_refine(packed_levels, qs, d0, delta_sq, cross, norm, rho,
+                      valid, _is_delta, lvl_proj, lvl_norm, lvl_rho, w,
+                      bias, resid_std, _z, *, k: int, block_c: int,
+                      dim: int):
+    """The datapath the fused kernel replaced: level-0 Pallas kernel, then
+    pure-jnp unpack + stacking per deeper level, estimates and alive masks
+    round-tripping through HBM between levels (cauchy bound)."""
+    from repro.core.estimator import pooled_k_smallest
+    out = refine_scores_batch(packed_levels[0], qs, d0, delta_sq, cross,
+                              norm, rho, w, bias, block_c=block_c)
+    est, est_raw, margin = out[..., 0], out[..., 1], out[..., 2]
+    lo, hi = est_raw - margin, est_raw + margin
+    tau = pooled_k_smallest(jnp.where(valid, hi, jnp.inf), k, None)
+    alive = valid & (lo <= tau[:, None])
+    qn = jnp.linalg.norm(qs, axis=-1, keepdims=True)
+    for lv in range(1, packed_levels.shape[0]):
+        trits = unpack_ternary(packed_levels[lv], dim)
+        align = ternary_inner(trits, qs[:, None, :])
+        est = est - 2.0 * lvl_proj[lv] * align
+        rem = lvl_norm[lv] * jnp.sqrt(
+            jnp.clip(1.0 - lvl_rho[lv] ** 2, 0.0, 1.0))
+        marg = 2.0 * qn * rem + resid_std
+        tau = pooled_k_smallest(jnp.where(alive, est + marg, jnp.inf), k,
+                                None)
+        alive = alive & (est - marg <= tau[:, None])
+    return est, alive
 
 
 def run(c: int = 4096, d: int = 768) -> None:
@@ -30,10 +95,51 @@ def run(c: int = 4096, d: int = 768) -> None:
                    tc.rho, w, jnp.asarray(0.0), iters=3)
     emit("kernel_ternary_refine_us", us, f"candidates={c};dim={d}")
 
+    # batched level-0 kernel: the executor's per-micro-batch launch
+    nq_b = 4
+    us = time_call(refine_scores_batch,
+                   jnp.broadcast_to(packed, (nq_b, c, packed.shape[1])),
+                   jax.random.normal(ks[2], (nq_b, d)),
+                   jnp.broadcast_to(d0, (nq_b, c)),
+                   jnp.zeros((nq_b, c)), jnp.zeros((nq_b, c)),
+                   jnp.broadcast_to(tc.norm, (nq_b, c)),
+                   jnp.broadcast_to(tc.rho, (nq_b, c)), w,
+                   jnp.asarray(0.0), iters=3)
+    emit("kernel_ternary_refine_batch_us", us,
+         f"queries={nq_b};candidates={c};dim={d}")
+
     codes = jax.random.randint(key, (c, 96), 0, 256).astype(jnp.uint8)
     lut = jax.random.uniform(ks[1], (96, 256))
     us = time_call(adc_scores, codes, lut, iters=3)
     emit("kernel_pq_adc_us", us, f"candidates={c};m=96")
+
+    # fused persistent multi-level kernel vs the pre-fusion datapath
+    nq_f, c_f, d_f, levels, k = 4, 2048, 256, 3, 10
+    _, args = _trq_problem(nq_f, c_f, d_f, levels)
+    fused = functools.partial(fused_refine_scores_batch, k=k,
+                              bound="cauchy", block_c=512)
+    us_fused = time_call(fused, *args, iters=3)
+    emit("kernel_fused_refine_us", us_fused,
+         f"queries={nq_f};candidates={c_f};dim={d_f};levels={levels}",
+         levels=levels, block_c=512)
+    prefusion = functools.partial(_prefusion_refine, k=k, block_c=512,
+                                  dim=d_f)
+    us_pre = time_call(prefusion, *args, iters=3)
+    emit("kernel_l0_plus_jnp_refine_us", us_pre,
+         f"queries={nq_f};candidates={c_f};dim={d_f};levels={levels};"
+         f"fused_speedup={us_pre / us_fused:.2f}x",
+         levels=levels, fused_speedup=us_pre / us_fused)
+
+    # block_c autotune sweep over the fused kernel (level tiling is the
+    # grid's middle dimension — every block_c covers all levels in one
+    # launch, so the sweep is the full fused-kernel tuning space)
+    for bc in (128, 256, 512, 1024):
+        f = functools.partial(fused_refine_scores_batch, k=k,
+                              bound="cauchy", block_c=bc)
+        us = time_call(f, *args, iters=3)
+        emit(f"kernel_fused_refine_block{bc}_us", us,
+             f"queries={nq_f};candidates={c_f};dim={d_f};levels={levels};"
+             f"block_c={bc}", levels=levels, block_c=bc)
 
     # HBM traffic per candidate: packed ternary vs full-precision fetch
     far = packed_size(d) + 20
@@ -44,3 +150,4 @@ def run(c: int = 4096, d: int = 768) -> None:
 
 if __name__ == "__main__":
     run()
+    write_json("bench_kernels")

@@ -206,19 +206,21 @@ def fold_counts(counts: dict[str, int], *, cost: QueryCost | None, config,
     # Candidates that came off delta pages (streaming subsystem, counter
     # ``delta_cand``) stream the SAME far-memory bytes but are billed to a
     # DISTINCT ledger entry so delta-list traffic stays visible; static
-    # indexes never emit the counter and their ledgers are unchanged.
-    # Scope: the split covers the LEVEL-0 stream (every candidate) — the
-    # dominant delta traffic, since delta lists are short-lived between
-    # compactions.  Levels ℓ ≥ 1 would need per-level delta survivor masks
-    # threaded through both backends; their (survivor-only) traffic is
-    # charged to the shared "refine" entry, mixing base and delta rows.
+    # indexes never emit the counters and their ledgers are unchanged.
+    # The split covers EVERY level of the stream: level 0 via
+    # ``delta_cand`` (all candidates), levels ℓ ≥ 1 via the per-level
+    # delta survivor counters (``refine_alive_l{ℓ}_delta``) both refine
+    # backends emit whenever the front marks delta candidates.
     n_delta = counts.get("delta_cand", 0)
     cost.record("refine", Tier.CXL, n_cand - n_delta, layout.far_bytes)
     if n_delta:
         cost.record("delta", Tier.CXL, n_delta, layout.far_bytes)
     for lv in range(1, config.trq_levels):
         n_lv = counts.get(f"refine_alive_l{lv}", n_alive)
-        cost.record("refine", Tier.CXL, n_lv, layout.far_bytes)
+        n_lv_delta = counts.get(f"refine_alive_l{lv}_delta", 0)
+        cost.record("refine", Tier.CXL, n_lv - n_lv_delta, layout.far_bytes)
+        if n_lv_delta:
+            cost.record("delta", Tier.CXL, n_lv_delta, layout.far_bytes)
     # survivors (≤ budget per query) hit SSD
     cost.record("rerank", Tier.SSD, counts["ssd_fetch"], layout.ssd_bytes)
     cost.add_compute(_COMPUTE_S_PER_CAND * n_cand)

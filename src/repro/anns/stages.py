@@ -11,8 +11,10 @@ micro-batches — no per-query Python closures anywhere:
             packed ternary codes from far memory.  Two backends with
             identical semantics: ``ReferenceRefineBackend`` (pure-jnp
             ``core.estimator`` / ``trq.progressive_search`` math) and
-            ``PallasRefineBackend`` (the fused ``kernels.ternary_refine``
-            batched kernel + the same level-stacking/pruning on top).
+            ``PallasRefineBackend`` (the persistent
+            ``kernels.ternary_refine_fused`` kernel: ALL TRQ levels, the
+            certified bounds, the alive-mask chain and the per-level
+            survivor counters in one ``pallas_call`` per micro-batch).
   rerank  : survivors fetch full-precision vectors ("SSD") for exact L2.
 
 Every stage returns *device-side* counters (0-d int32 arrays) alongside its
@@ -42,8 +44,6 @@ import jax.numpy as jnp
 from repro.anns import registry
 from repro.core import trq as trq_mod
 from repro.core.estimator import pooled_k_smallest
-from repro.core.packing import unpack_ternary
-from repro.core.ternary import ternary_inner
 from repro.core.trq import TRQCodes
 from repro.index import graph as graph_mod
 from repro.index import ivf as ivf_mod
@@ -55,12 +55,18 @@ Counters = dict[str, jax.Array]     # name → 0-d device counter
 
 
 class Candidates(NamedTuple):
-    """Front-stage output for a query micro-batch."""
+    """Front-stage output for a query micro-batch.
+
+    ``is_delta`` marks candidates living in delta spill pages (streaming
+    fronts populate it; static/sharded fronts leave it ``None``) so the
+    refine backends can split per-level survivor traffic for the ledger.
+    """
 
     ids: jax.Array        # (Q, C) int32, clamped ≥ 0
     valid: jax.Array      # (Q, C) bool
     d0: jax.Array         # (Q, C) f32 coarse ADC distance, +inf if invalid
     counters: Counters
+    is_delta: jax.Array | None = None   # (Q, C) bool, or None
 
 
 class Refined(NamedTuple):
@@ -241,17 +247,24 @@ class GraphFrontStage:
 # ---------------------------------------------------------- refine backends
 
 
-def _level_counters(level_alive: tuple[jax.Array, ...]) -> Counters:
+def _level_counters(level_alive: tuple[jax.Array, ...],
+                    is_delta: jax.Array | None = None) -> Counters:
     """Per-level survivor counters from the alive-mask chain.
 
     ``refine_alive`` is the FINAL survivor count (kept for the single-level
     ledger and back-compat); ``refine_alive_l{ℓ}`` counts the candidates
     ENTERING level ℓ ≥ 1 — i.e. survivors of level ℓ−1 — which is exactly
-    the population whose level-ℓ codes stream from far memory.
+    the population whose level-ℓ codes stream from far memory.  When the
+    front marks delta-page candidates, ``refine_alive_l{ℓ}_delta`` is the
+    delta-resident share of that population, so the executor can bill it
+    to the delta spill stream instead of the base residual store.
     """
     counters: Counters = {"refine_alive": jnp.sum(level_alive[-1])}
     for lv in range(1, len(level_alive)):
         counters[f"refine_alive_l{lv}"] = jnp.sum(level_alive[lv - 1])
+        if is_delta is not None:
+            counters[f"refine_alive_l{lv}_delta"] = jnp.sum(
+                level_alive[lv - 1] & is_delta)
     return counters
 
 
@@ -282,7 +295,7 @@ class ReferenceRefineBackend:
             queries, cand.d0, cand.ids, cand.valid, trq, k=k, bound=bound,
             z=z, axis_name=axis_name)
         return Refined(est=est, alive=level_alive[-1],
-                       counters=_level_counters(level_alive))
+                       counters=_level_counters(level_alive, cand.is_delta))
 
 
 def _topk_threshold_batch(hi: jax.Array, alive: jax.Array, k: int,
@@ -298,51 +311,70 @@ def _topk_threshold_batch(hi: jax.Array, alive: jax.Array, k: int,
 
 @partial(jax.jit, static_argnames=("k", "bound", "z", "block_c",
                                    "axis_name"))
-def _pallas_refine(queries, d0, ids, valid, trq: TRQCodes, *, k: int,
-                   bound: str, z: float, block_c: int,
+def _pallas_refine(queries, d0, ids, valid, is_delta, trq: TRQCodes, *,
+                   k: int, bound: str, z: float, block_c: int,
                    axis_name: str | None = None):
-    sc = trq.scalars
-    packed = trq.levels[0].packed[ids]                        # (Q, C, G)
-    out = kernel_ops.refine_scores_batch(
-        packed, queries, d0, sc.delta_sq[ids], sc.cross[ids], sc.norm[ids],
-        sc.rho[ids], trq.model.w, trq.model.bias, block_c=block_c)
-    est, est_raw, margin = out[..., 0], out[..., 1], out[..., 2]
-    if bound == "cauchy":
-        lo, hi = est_raw - margin, est_raw + margin
-    elif bound == "quantile":
-        m = z * trq.model.resid_std
-        lo, hi = est - m, est + m
-    else:
-        raise ValueError(f"unknown bound {bound!r}")
-    tau = _topk_threshold_batch(hi, valid, k, axis_name)
-    alive = valid & (lo <= tau[:, None])
-    level_alive = [alive]
+    """Persistent fused refinement: ONE pallas_call per query micro-batch.
 
-    # Deeper TRQ levels: identical stacking math to trq.progressive_search,
-    # batched over queries (the kernel covers the hot level-0 stream).
-    if trq.num_levels > 1:
-        qn = jnp.linalg.norm(queries, axis=-1, keepdims=True)
-        for lv in range(1, trq.num_levels):
-            level = trq.levels[lv]
-            trits = unpack_ternary(level.packed[ids], trq.dim)
-            align = ternary_inner(trits, queries[:, None, :])
-            est = est - 2.0 * level.proj[ids] * align
-            rem = level.norm[ids] * jnp.sqrt(
-                jnp.clip(1.0 - level.rho[ids] ** 2, 0.0, 1.0))
-            marg = 2.0 * qn * rem + trq.model.resid_std
-            tau = _topk_threshold_batch(est + marg, alive, k, axis_name)
-            alive = alive & (est - marg <= tau[:, None])
-            level_alive.append(alive)
-    return est, tuple(level_alive)
+    All TRQ levels' packed codes and [proj, norm, rho] planes are gathered
+    up front; the kernel walks them level-by-level with the running
+    estimate / certified bounds / alive mask resident in VMEM scratch, so
+    no intermediate estimates or masks round-trip through HBM.
+
+    Unsharded (``axis_name=None``): the pruning threshold after each level
+    is computed on-chip (SMEM carry) and the kernel directly returns the
+    final estimates, survivor mask and per-level survivor counts.
+
+    Sharded (inside shard_map): thresholds must be globally exact, so the
+    kernel's bounds-emitting form returns every level's certified
+    (lo, hi) from the same single launch and the alive chain runs here
+    with ``pooled_k_smallest`` exchanging thresholds across ``axis_name``
+    between level segments — bit-identical masks to the on-chip form.
+    """
+    sc = trq.scalars
+    packed_levels = jnp.stack([lv.packed[ids] for lv in trq.levels])
+    lvl_proj = jnp.stack([lv.proj[ids] for lv in trq.levels])
+    lvl_norm = jnp.stack([lv.norm[ids] for lv in trq.levels])
+    lvl_rho = jnp.stack([lv.rho[ids] for lv in trq.levels])
+    delta_mask = jnp.zeros_like(valid) if is_delta is None else is_delta
+    args = (packed_levels, queries, d0, sc.delta_sq[ids], sc.cross[ids],
+            sc.norm[ids], sc.rho[ids], valid, delta_mask, lvl_proj,
+            lvl_norm, lvl_rho, trq.model.w, trq.model.bias,
+            trq.model.resid_std, z)
+
+    if axis_name is None:
+        est, alive, counts = kernel_ops.fused_refine_scores_batch(
+            *args, k=k, bound=bound, block_c=block_c)
+        nl = trq.num_levels
+        counters: Counters = {"refine_alive": jnp.sum(counts[:, nl - 1])}
+        for lv in range(1, nl):
+            counters[f"refine_alive_l{lv}"] = jnp.sum(counts[:, lv - 1])
+            if is_delta is not None:
+                counters[f"refine_alive_l{lv}_delta"] = jnp.sum(
+                    counts[:, nl + lv - 1])
+        return est, alive, counters
+
+    est, lo, hi = kernel_ops.fused_refine_bounds_batch(
+        *args, bound=bound, block_c=block_c)
+    alive = valid
+    level_alive = []
+    for lv in range(trq.num_levels):
+        tau = _topk_threshold_batch(hi[:, lv], alive, k, axis_name)
+        alive = alive & (lo[:, lv] <= tau[:, None])
+        level_alive.append(alive)
+    return est, alive, _level_counters(tuple(level_alive), is_delta)
 
 
 @dataclass
 class PallasRefineBackend:
-    """Fused-kernel path (``kernels.ternary_refine`` batched grid).
+    """Persistent fused-kernel path (``kernels.ternary_refine_fused``).
 
-    Produces the same estimates/survivors as the reference backend (the
-    kernel is tested against ``core.estimator.refine_level`` bit-for-bit at
-    f32 tolerance); on CPU containers the kernel runs in interpret mode.
+    The whole progressive-refinement loop — digit-plane unpack, per-level
+    estimate stacking, certified margins, pruning thresholds, survivor
+    masks and ledger counters — runs as a single ``pallas_call`` per query
+    micro-batch (per shard when sharded).  Produces the same survivors and
+    ledger as the reference backend; on CPU containers the kernel runs in
+    interpret mode.
     """
 
     block_c: int = 512
@@ -351,11 +383,11 @@ class PallasRefineBackend:
     def refine(self, queries: jax.Array, cand: Candidates, trq: TRQCodes,
                *, k: int, bound: str, z: float,
                axis_name: str | None = None) -> Refined:
-        est, level_alive = _pallas_refine(
-            queries, cand.d0, cand.ids, cand.valid, trq, k=k, bound=bound,
-            z=z, block_c=self.block_c, axis_name=axis_name)
-        return Refined(est=est, alive=level_alive[-1],
-                       counters=_level_counters(level_alive))
+        est, alive, counters = _pallas_refine(
+            queries, cand.d0, cand.ids, cand.valid, cand.is_delta, trq,
+            k=k, bound=bound, z=z, block_c=self.block_c,
+            axis_name=axis_name)
+        return Refined(est=est, alive=alive, counters=counters)
 
 
 # ----------------------------------------------------------------- rerank

@@ -122,8 +122,10 @@ def _streaming_candidates(centroids, codebook, pq_codes, base_lists,
     safe = jnp.maximum(ids, 0)
     valid = (ids >= 0) & alive[safe]                          # tombstone mask
     d0 = adc_score(codebook, pq_codes[safe], queries, valid)
-    is_delta = jnp.arange(ids.shape[1])[None, :] >= ids_b.shape[1]
-    return safe, valid, d0, jnp.sum(valid), jnp.sum(valid & is_delta)
+    is_delta = jnp.broadcast_to(
+        jnp.arange(ids.shape[1])[None, :] >= ids_b.shape[1], ids.shape)
+    return (safe, valid, d0, is_delta, jnp.sum(valid),
+            jnp.sum(valid & is_delta))
 
 
 @dataclass
@@ -144,12 +146,13 @@ class StreamingFrontStage:
     name: str = "streaming"
 
     def candidates(self, queries: jax.Array) -> Candidates:
-        safe, valid, d0, n_cand, n_delta = _streaming_candidates(
+        safe, valid, d0, is_delta, n_cand, n_delta = _streaming_candidates(
             self.centroids, self.codebook, self.pq_codes, self.base_lists,
             self.delta_lists, self.alive, queries, nprobe=self.nprobe)
         return Candidates(ids=safe, valid=valid, d0=d0,
                           counters={"front_cand": n_cand,
-                                    "delta_cand": n_delta})
+                                    "delta_cand": n_delta},
+                          is_delta=is_delta)
 
     def fold_cost(self, cost: QueryCost, counts: dict[str, int],
                   layout) -> None:
@@ -170,7 +173,8 @@ def _graph_streaming_candidates(neighbors, x_score, codebook, pq_codes,
     valid = alive[ids]
     d0 = adc_score(codebook, pq_codes[ids], queries, valid)
     is_delta = ids >= n_base
-    return ids, valid, d0, jnp.sum(valid), jnp.sum(valid & is_delta)
+    return (ids, valid, d0, is_delta, jnp.sum(valid),
+            jnp.sum(valid & is_delta))
 
 
 @dataclass
@@ -198,17 +202,19 @@ class GraphStreamingFrontStage:
             self.x_score = pq_mod.decode(self.codebook, self.pq_codes)
 
     def candidates(self, queries: jax.Array) -> Candidates:
-        ids, valid, d0, n_cand, n_delta = _graph_streaming_candidates(
-            self.graph.neighbors, self.x_score, self.codebook,
-            self.pq_codes, self.alive, queries, iters=self.iters,
-            beam=self.beam, expand=self.expand, n_base=self.n_base)
+        ids, valid, d0, is_delta, n_cand, n_delta = \
+            _graph_streaming_candidates(
+                self.graph.neighbors, self.x_score, self.codebook,
+                self.pq_codes, self.alive, queries, iters=self.iters,
+                beam=self.beam, expand=self.expand, n_base=self.n_base)
         nq = queries.shape[0]
         hops = jnp.asarray(nq * self.iters * self.expand * self.graph.degree,
                            jnp.int32)
         return Candidates(ids=ids, valid=valid, d0=d0,
                           counters={"front_cand": n_cand,
                                     "front_hops": hops,
-                                    "delta_cand": n_delta})
+                                    "delta_cand": n_delta},
+                          is_delta=is_delta)
 
     def fold_cost(self, cost: QueryCost, counts: dict[str, int],
                   layout) -> None:

@@ -1,9 +1,10 @@
 """jit'd public wrappers around the Pallas kernels.
 
 Handle padding to block multiples, build the query digit planes / parameter
-vectors, and dispatch to interpret mode on CPU (the container) vs compiled
-mode on TPU.  The wrappers take the same logical arguments as the pure-jnp
-oracles in ref.py.
+vectors, and enforce the per-step VMEM budget.  Backend dispatch (compiled
+on TPU, interpreter elsewhere) happens inside the kernels' own
+``interpret=None`` auto-detection.  The wrappers take the same logical
+arguments as the pure-jnp oracles in ref.py.
 """
 
 from __future__ import annotations
@@ -15,9 +16,44 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.pq_adc import pq_adc
-from repro.kernels.ternary_refine import ternary_refine, ternary_refine_batch
+from repro.kernels.ternary_refine import (ternary_refine,
+                                          ternary_refine_batch,
+                                          ternary_refine_fused,
+                                          ternary_refine_fused_bounds)
 
 _ON_TPU = jax.default_backend() == "tpu"
+
+#: Per-core VMEM capacity the kernels budget against (v4/v5e ≈ 16 MiB).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+class VMEMBudgetError(ValueError):
+    """A block_c / level-count combination exceeds the per-step VMEM budget."""
+
+
+def _check_vmem_budget(*, what: str, block_c: int, g: int, c_pad: int,
+                       num_levels: int = 1, fused: bool = False) -> None:
+    """Reject block/level configurations whose per-step working set cannot
+    fit in VMEM.  Counted per grid step: double-buffered input blocks
+    (codes + scalars + level scalars + digit planes + params) plus, for the
+    fused kernels, the full-candidate-set scratch (est/lo/hi/alive/delta)
+    and resident outputs that persist across level segments."""
+    per_step = (block_c * g                # packed codes (uint8)
+                + block_c * 8 * 4          # level-0 scalars
+                + 5 * g * 4                # query digit planes
+                + 8 * 4)                   # params
+    if fused:
+        per_step += block_c * 4 * 4        # level scalars
+    total = 2 * per_step                   # double buffering
+    if fused:
+        total += 5 * c_pad * 4             # est/lo/hi/alive/delta scratch
+        total += (2 * c_pad + 2 * num_levels) * 4   # resident outputs
+    if total > VMEM_BUDGET_BYTES:
+        raise VMEMBudgetError(
+            f"{what}: block_c={block_c} x {num_levels} level(s) over "
+            f"{c_pad} padded candidates needs ~{total / 2**20:.1f} MiB of "
+            f"VMEM per grid step, over the {VMEM_BUDGET_BYTES / 2**20:.0f} "
+            f"MiB per-core budget; lower block_c or the refine budget")
 
 
 def _pad_rows(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
@@ -28,13 +64,18 @@ def _pad_rows(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
     return x, c
 
 
-def _pad_axis1(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
-    c = x.shape[1]
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> tuple[jax.Array, int]:
+    c = x.shape[axis]
     pad = (-c) % mult
     if pad:
-        widths = [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
         x = jnp.pad(x, widths)
     return x, c
+
+
+def _pad_axis1(x: jax.Array, mult: int) -> tuple[jax.Array, int]:
+    return _pad_axis(x, 1, mult)
 
 
 @functools.partial(jax.jit, static_argnames=("block_c",))
@@ -56,9 +97,29 @@ def refine_scores(packed: jax.Array, q: jax.Array, d0: jax.Array,
                               jnp.zeros((2,), jnp.float32)])[None, :]  # (1,8)
     packed_p, c0 = _pad_rows(packed, block_c)
     scalars_p, _ = _pad_rows(scalars.astype(jnp.float32), block_c)
+    _check_vmem_budget(what="refine_scores", block_c=block_c, g=g,
+                       c_pad=packed_p.shape[0])
     out = ternary_refine(packed_p, q_planes, scalars_p, params,
-                         block_c=block_c, interpret=not _ON_TPU)
+                         block_c=block_c)
     return out[:c0]
+
+
+def _batch_planes_params(q: jax.Array, g: int, w: jax.Array,
+                         bias: jax.Array, extra: jax.Array | None = None
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Per-query digit planes (Q, 5, G) + params (Q, 8)
+    [qn, w0..w3, bias, extra0, extra1]."""
+    q32 = q.astype(jnp.float32)
+    nq = q32.shape[0]
+    q_planes = jax.vmap(lambda qq: ref.make_query_planes(qq, g))(q32)
+    qn = jnp.linalg.norm(q32, axis=-1)                          # (Q,)
+    wb = jnp.concatenate([w.astype(jnp.float32),
+                          bias[None].astype(jnp.float32)])
+    params = jnp.concatenate(
+        [qn[:, None], jnp.broadcast_to(wb, (nq, 5)),
+         jnp.zeros((nq, 2), jnp.float32) if extra is None
+         else jnp.broadcast_to(extra, (nq, 2))], axis=1)        # (Q, 8)
+    return q_planes, params
 
 
 @functools.partial(jax.jit, static_argnames=("block_c",))
@@ -73,21 +134,108 @@ def refine_scores_batch(packed: jax.Array, q: jax.Array, d0: jax.Array,
     as ``refine_scores`` run once per query, in a single kernel launch.
     """
     nq, c, g = packed.shape
-    q32 = q.astype(jnp.float32)
-    q_planes = jax.vmap(lambda qq: ref.make_query_planes(qq, g))(q32)
+    q_planes, params = _batch_planes_params(q, g, w, bias)
     scalars = jnp.stack([d0, delta_sq, cross, norm, rho] +
                         [jnp.zeros_like(d0)] * 3, axis=-1)     # (Q, C, 8)
-    qn = jnp.linalg.norm(q32, axis=-1)                          # (Q,)
-    wb = jnp.concatenate([w.astype(jnp.float32),
-                          bias[None].astype(jnp.float32),
-                          jnp.zeros((2,), jnp.float32)])
-    params = jnp.concatenate([qn[:, None],
-                              jnp.broadcast_to(wb, (nq, 7))], axis=1)  # (Q,8)
     packed_p, c0 = _pad_axis1(packed, block_c)
     scalars_p, _ = _pad_axis1(scalars.astype(jnp.float32), block_c)
+    _check_vmem_budget(what="refine_scores_batch", block_c=block_c, g=g,
+                       c_pad=packed_p.shape[1])
     out = ternary_refine_batch(packed_p, q_planes, scalars_p, params,
-                               block_c=block_c, interpret=not _ON_TPU)
+                               block_c=block_c)
     return out[:, :c0]
+
+
+def _fused_inputs(packed_levels, q, d0, delta_sq, cross, norm, rho, valid,
+                  is_delta, lvl_proj, lvl_norm, lvl_rho, w, bias, resid_std,
+                  z, block_c):
+    """Shared input assembly for the fused kernels: gather/stack the
+    level-0 scalar plane (valid + is_delta flags in slots 5/6), the
+    per-level [proj, norm, rho] planes, and the per-query params with
+    [z·resid_std, resid_std] in the extra slots; pad candidates to a
+    block_c multiple (padded slots have valid=0, so they never survive)."""
+    l, nq, c, g = packed_levels.shape
+    rs = jnp.asarray(resid_std, jnp.float32)
+    extra = jnp.stack([jnp.float32(z) * rs, rs])
+    q_planes, params = _batch_planes_params(q, g, w, bias, extra)
+    zeros = jnp.zeros_like(d0)
+    scalars = jnp.stack(
+        [d0, delta_sq, cross, norm, rho, valid.astype(jnp.float32),
+         is_delta.astype(jnp.float32), zeros], axis=-1)         # (Q, C, 8)
+    level_scalars = jnp.stack(
+        [lvl_proj, lvl_norm, lvl_rho, jnp.zeros_like(lvl_proj)],
+        axis=-1)                                                # (L, Q, C, 4)
+    packed_p, c0 = _pad_axis(packed_levels, 2, block_c)
+    scalars_p, _ = _pad_axis(scalars.astype(jnp.float32), 1, block_c)
+    lvl_p, _ = _pad_axis(level_scalars.astype(jnp.float32), 2, block_c)
+    return packed_p, q_planes, scalars_p, lvl_p, params, c0
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bound", "block_c"))
+def fused_refine_scores_batch(packed_levels: jax.Array, q: jax.Array,
+                              d0: jax.Array, delta_sq: jax.Array,
+                              cross: jax.Array, norm: jax.Array,
+                              rho: jax.Array, valid: jax.Array,
+                              is_delta: jax.Array, lvl_proj: jax.Array,
+                              lvl_norm: jax.Array, lvl_rho: jax.Array,
+                              w: jax.Array, bias: jax.Array,
+                              resid_std: jax.Array, z: float, *, k: int,
+                              bound: str, block_c: int = 512
+                              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Whole progressive-refinement loop in ONE kernel launch.
+
+    packed_levels (L, Q, C, G) per-level gathered codes; q (Q, D);
+    level-0 scalars d0/delta_sq/cross/norm/rho + masks valid/is_delta all
+    (Q, C); per-level lvl_proj/lvl_norm/lvl_rho (L, Q, C); calibration
+    w (4,)/bias; resid_std + quantile width z for the certified margins.
+
+    Returns (est (Q, C), alive (Q, C) bool, counts (Q, 2L) int32) — counts
+    rows are [survivors after level 0..L−1, then the delta-page survivor
+    split for the ledger].  Thresholds are computed on-chip, so this form
+    is for unsharded execution; sharded callers use
+    ``fused_refine_bounds_batch`` and pool thresholds across the mesh.
+    """
+    inputs = _fused_inputs(packed_levels, q, d0, delta_sq, cross, norm, rho,
+                           valid, is_delta, lvl_proj, lvl_norm, lvl_rho, w,
+                           bias, resid_std, z, block_c)
+    packed_p, q_planes, scalars_p, lvl_p, params, c0 = inputs
+    l, g = packed_levels.shape[0], packed_levels.shape[3]
+    _check_vmem_budget(what="fused_refine_scores_batch", block_c=block_c,
+                       g=g, c_pad=packed_p.shape[2], num_levels=l,
+                       fused=True)
+    est, alive, counts = ternary_refine_fused(
+        packed_p, q_planes, scalars_p, lvl_p, params, k=k, bound=bound,
+        block_c=block_c)
+    return est[:, :c0], alive[:, :c0].astype(bool), counts
+
+
+@functools.partial(jax.jit, static_argnames=("bound", "block_c"))
+def fused_refine_bounds_batch(packed_levels: jax.Array, q: jax.Array,
+                              d0: jax.Array, delta_sq: jax.Array,
+                              cross: jax.Array, norm: jax.Array,
+                              rho: jax.Array, valid: jax.Array,
+                              is_delta: jax.Array, lvl_proj: jax.Array,
+                              lvl_norm: jax.Array, lvl_rho: jax.Array,
+                              w: jax.Array, bias: jax.Array,
+                              resid_std: jax.Array, z: float, *, bound: str,
+                              block_c: int = 512
+                              ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sharded companion of ``fused_refine_scores_batch``: identical inputs
+    and single-launch level stacking, returning (est (Q, C), lo (Q, L, C),
+    hi (Q, L, C)) so the caller can exchange pruning thresholds globally
+    (``pooled_k_smallest`` over the mesh axis) between level segments."""
+    inputs = _fused_inputs(packed_levels, q, d0, delta_sq, cross, norm, rho,
+                           valid, is_delta, lvl_proj, lvl_norm, lvl_rho, w,
+                           bias, resid_std, z, block_c)
+    packed_p, q_planes, scalars_p, lvl_p, params, c0 = inputs
+    l, g = packed_levels.shape[0], packed_levels.shape[3]
+    _check_vmem_budget(what="fused_refine_bounds_batch", block_c=block_c,
+                       g=g, c_pad=packed_p.shape[2], num_levels=l,
+                       fused=True)
+    est, lo, hi = ternary_refine_fused_bounds(
+        packed_p, q_planes, scalars_p, lvl_p, params, bound=bound,
+        block_c=block_c)
+    return est[:, :c0], lo[:, :, :c0], hi[:, :, :c0]
 
 
 @functools.partial(jax.jit, static_argnames=("block_c",))

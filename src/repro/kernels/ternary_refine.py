@@ -1,19 +1,41 @@
-"""Fused FaTRQ refinement Pallas kernel — the paper's CXL accelerator
+"""Fused FaTRQ refinement Pallas kernels — the paper's CXL accelerator
 datapath, re-expressed for the TPU memory hierarchy.
 
 The paper streams packed ternary codes from far memory into a small decoder
-LUT + add/sub datapath.  On TPU the analogous structure is: packed codes
-live in HBM at 1.6 bit/dim (the "far" tier), each grid step DMAs one
-candidate block into VMEM (the "near" tier), and the VPU unpacks + scores
-it without ever materializing full-precision residuals in HBM.  The fusion
-(unpack → ternary inner product → calibrated estimate → certified margin)
-is the whole point: HBM traffic is ⌈D/5⌉+20 bytes per candidate instead of
+LUT + add/sub datapath with per-level early exit.  On TPU the analogous
+structure is: packed codes live in HBM at 1.6 bit/dim (the "far" tier),
+each grid step DMAs one candidate block into VMEM (the "near" tier), and
+the VPU unpacks + scores it without ever materializing full-precision
+residuals in HBM.  HBM traffic is ⌈D/5⌉+20 bytes per candidate instead of
 4·D for full vectors — the bandwidth form of the paper's "no multiplies".
+
+Three kernels share the digit-plane scoring body:
+
+* ``ternary_refine`` / ``ternary_refine_batch`` — level-0 scoring only:
+  unpack → ternary inner product → calibrated estimate → certified margin
+  for one candidate block per grid step.
+* ``ternary_refine_fused`` — the WHOLE progressive-refinement loop in one
+  ``pallas_call``: the grid walks ``(query, level, candidate-block)`` with
+  the level segments sequential, the running estimate / certified bounds /
+  alive mask resident in VMEM scratch across segments, the per-level
+  pruning threshold (kth-smallest upper bound among survivors) computed
+  on-chip and carried in SMEM scratch, and per-level survivor counts
+  (total + delta-page split) emitted for the cost ledger.  Intermediate
+  estimates and masks never round-trip through HBM.
+* ``ternary_refine_fused_bounds`` — the sharded variant of the same
+  single-launch datapath: level stacking still happens entirely in VMEM
+  scratch, but instead of masking on-chip it emits each level's certified
+  ``(lo, hi)`` interval so the caller can pool pruning thresholds globally
+  across a mesh axis (``shard_map`` collectives cannot run inside a
+  kernel); the alive chain applied outside is arithmetically identical.
 
 Layout note: base-3 digit i of byte g holds dim 5g+i, so the query is
 pre-arranged into 5 digit planes of (G,) (see ref.make_query_planes) and
 unpacking is 5 div/mod passes over the byte block — no reshapes, no
 gathers, fully vectorized on 8×128 VPU tiles.
+
+``interpret`` defaults to backend auto-detection (compiled on TPU,
+interpreter elsewhere); pass an explicit bool only to force a mode.
 """
 
 from __future__ import annotations
@@ -23,21 +45,24 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _POW3 = (1, 3, 9, 27, 81)
 
+_ON_TPU = jax.default_backend() == "tpu"
 
-def _score_block(y, qplanes, scal, params):
-    """Shared scoring math: one candidate block of one query.
 
-    y (BC, G) int32 packed bytes, qplanes (5, G), scal (BC, 8), params (8,)
-    → (est, est_raw, margin), each (BC,).  Both kernels call this; only the
-    ref slicing differs between the single-query and batched grids.
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """None → auto-detect: compiled on TPU, interpreter everywhere else."""
+    return (not _ON_TPU) if interpret is None else bool(interpret)
+
+
+def _block_align(y, qplanes):
+    """Digit-plane unpack + ternary inner product for one candidate block.
+
+    y (BC, G) int32 packed bytes, qplanes (5, G) → align (BC,) = Σc·q/√k,
+    the ⟨q, e_code⟩ term every level's estimate update consumes.
     """
-    qn = params[0]
-    w0, w1, w2, w3, bias = params[1], params[2], params[3], params[4], \
-        params[5]
-
     acc = jnp.zeros(y.shape, jnp.float32)
     kcnt = jnp.zeros(y.shape, jnp.int32)
     for i in range(5):
@@ -47,7 +72,21 @@ def _score_block(y, qplanes, scal, params):
         kcnt = kcnt + digit * digit
     raw = jnp.sum(acc, axis=1)                     # Σ c·q        (BC,)
     k = jnp.sum(kcnt, axis=1).astype(jnp.float32)  # ||c||²       (BC,)
-    align = raw / jnp.sqrt(jnp.maximum(k, 1.0))    # Σ c·q / √k
+    return raw / jnp.sqrt(jnp.maximum(k, 1.0))     # Σ c·q / √k
+
+
+def _score_block(y, qplanes, scal, params):
+    """Shared level-0 scoring math: one candidate block of one query.
+
+    y (BC, G) int32 packed bytes, qplanes (5, G), scal (BC, 8), params (8,)
+    → (est, est_raw, margin), each (BC,).  All kernels call this; only the
+    ref slicing differs between the single-query and batched grids.
+    """
+    qn = params[0]
+    w0, w1, w2, w3, bias = params[1], params[2], params[3], params[4], \
+        params[5]
+
+    align = _block_align(y, qplanes)
 
     d0 = scal[:, 0]
     delta_sq = scal[:, 1]
@@ -63,6 +102,49 @@ def _score_block(y, qplanes, scal, params):
               * jnp.sqrt(jnp.clip(1.0 - e_align * e_align, 0.0, 1.0))
               * jnp.sqrt(jnp.clip(1.0 - rho * rho, 0.0, 1.0)))
     return est, est_raw, margin
+
+
+def _kth_smallest(vals, k: int):
+    """kth-smallest VALUE of a 1-D vector (the pruning threshold τ).
+
+    Matches ``estimator.pooled_k_smallest`` on the same multiset: the kth
+    order statistic is tie-invariant, so extracting k−1 minima (masking one
+    occurrence each round with an iota match) and taking the remaining min
+    is exactly the value ``lax.top_k`` would return.  k is static and
+    small (final_k), so the loop unrolls to k VPU reductions.
+    """
+    v = vals
+    for _ in range(k - 1):
+        idx = jnp.argmin(v)
+        iota = jax.lax.broadcasted_iota(jnp.int32, v.shape, 0)
+        v = jnp.where(iota == idx, jnp.inf, v)
+    return jnp.min(v)
+
+
+def _level0_bounds(est, est_raw, margin, params, bound: str):
+    """Certified (lo, hi) for level 0 under the configured bound."""
+    if bound == "cauchy":
+        return est_raw - margin, est_raw + margin
+    if bound == "quantile":
+        qm = params[6]                             # z · resid_std
+        return est - qm, est + qm
+    raise ValueError(f"unknown bound {bound!r}")
+
+
+def _deeper_bounds(est_prev, y, qplanes, lsc, params):
+    """Level-ℓ≥1 stacking for one block: est −= 2·proj·align, certified
+    margin 2·||q||·||δ_rem|| + resid_std (what trq.progressive_search
+    computes).  lsc (BC, 4) = [proj, norm, rho, ·]."""
+    qn, resid_std = params[0], params[7]
+    align = _block_align(y, qplanes)
+    est = est_prev - 2.0 * lsc[:, 0] * align
+    rem = lsc[:, 1] * jnp.sqrt(
+        jnp.clip(1.0 - lsc[:, 2] * lsc[:, 2], 0.0, 1.0))
+    marg = 2.0 * qn * rem + resid_std
+    return est, est - marg, est + marg
+
+
+# --------------------------------------------------------- level-0 kernels
 
 
 def _refine_kernel(packed_ref, qplanes_ref, scal_ref, params_ref, out_ref):
@@ -81,7 +163,8 @@ def _refine_kernel_batch(packed_ref, qplanes_ref, scal_ref, params_ref,
 
     Grid is (Q, C/BC); each step scores one candidate block of one query, so
     a whole micro-batch of queries runs as a single kernel launch — the
-    executor's batched refinement datapath.
+    executor's batched level-0 datapath (the fully fused multi-level loop
+    is ``_fused_kernel`` below).
     """
     est, est_raw, margin = _score_block(packed_ref[0].astype(jnp.int32),
                                         qplanes_ref[0], scal_ref[0],
@@ -94,9 +177,9 @@ def _refine_kernel_batch(packed_ref, qplanes_ref, scal_ref, params_ref,
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
 def ternary_refine_batch(packed: jax.Array, q_planes: jax.Array,
                          scalars: jax.Array, params: jax.Array, *,
-                         block_c: int = 512, interpret: bool = True
+                         block_c: int = 512, interpret: bool | None = None
                          ) -> jax.Array:
-    """Multi-query fused refine: one launch scores Q×C candidates.
+    """Multi-query level-0 refine: one launch scores Q×C candidates.
 
     packed (Q, C, G) uint8 — per-query gathered codes; q_planes (Q, 5, G);
     scalars (Q, C, 8) f32 [d0, ||δ||², ⟨x_c,δ⟩, ||δ||, rho, 0…];
@@ -106,6 +189,7 @@ def ternary_refine_batch(packed: jax.Array, q_planes: jax.Array,
     C must be a multiple of block_c (ops.py pads).  The grid walks queries
     in the outer dimension so each query's candidate blocks stream through
     VMEM back-to-back with its (5, G) digit planes held resident.
+    ``interpret=None`` auto-detects the backend (compiled on TPU).
     """
     nq, c, g = packed.shape
     assert c % block_c == 0, (c, block_c)
@@ -121,22 +205,23 @@ def ternary_refine_batch(packed: jax.Array, q_planes: jax.Array,
         ],
         out_specs=pl.BlockSpec((1, block_c, 4), lambda qi, ci: (qi, ci, 0)),
         out_shape=jax.ShapeDtypeStruct((nq, c, 4), jnp.float32),
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(packed, q_planes, scalars, params)[..., :3]
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
 def ternary_refine(packed: jax.Array, q_planes: jax.Array, scalars: jax.Array,
                    params: jax.Array, *, block_c: int = 512,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool | None = None) -> jax.Array:
     """packed (C, G) uint8, q_planes (5, G) f32, scalars (C, 5) f32
     [d0, ||δ||², ⟨x_c,δ⟩, ||δ||, rho], params (1, 8) f32
     [qn, w0..w3, b, 0, 0] → (C, 3) f32.
 
     C must be a multiple of block_c (ops.py pads).  VMEM per step:
-    block_c·G bytes of codes + 5·G query floats + block_c·5 scalars —
-    e.g. 512×154 ≈ 77 KiB codes, well within a v5e core's ~128 MiB VMEM
-    budget; block_c is sized so several steps double-buffer.
+    block_c·G bytes of codes + 5·G query floats + block_c·8 scalars —
+    e.g. 512×154 ≈ 77 KiB codes, a small slice of a TPU core's ~16 MiB
+    VMEM, so several steps double-buffer (ops.py enforces the budget).
+    ``interpret=None`` auto-detects the backend (compiled on TPU).
     """
     c, g = packed.shape
     assert c % block_c == 0, (c, block_c)
@@ -152,5 +237,217 @@ def ternary_refine(packed: jax.Array, q_planes: jax.Array, scalars: jax.Array,
         ],
         out_specs=pl.BlockSpec((block_c, 4), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((c, 4), jnp.float32),
-        interpret=interpret,
+        interpret=_resolve_interpret(interpret),
     )(packed, q_planes, scalars, params)[:, :3]
+
+
+# ------------------------------------------- fused multi-level kernels
+#
+# Grid (Q, L, C/BC): for each query, the level segments run sequentially
+# (TPU grids are sequential on a core), each walking the candidate blocks.
+# The running estimate, certified (lo, hi) interval, alive mask and
+# delta-page flag live in (C,) VMEM scratch that persists across segments;
+# per-level thresholds live in SMEM scratch.  Only the FINAL estimate,
+# alive mask and per-level survivor counts ever reach HBM.
+
+
+def _fused_kernel(packed_ref, qplanes_ref, scal0_ref, lvls_ref, params_ref,
+                  est_out, alive_out, counts_out,
+                  est_s, lo_s, hi_s, alive_s, delta_s, tau_s, *,
+                  num_levels: int, n_blocks: int, block_c: int, k: int,
+                  bound: str):
+    """Fully fused datapath: score, stack, threshold, mask, count — on chip.
+
+    scal0 (BC, 8) = [d0, ||δ||², ⟨x_c,δ⟩, ||δ||, rho, valid, is_delta, ·];
+    lvls (BC, 4) = level-ℓ [proj, norm, rho, ·];
+    params (8,) = [qn, w0..w3, bias, z·resid_std, resid_std].
+    counts_out (1, 2L): slots [0, L) hold Σ alive after each level, slots
+    [L, 2L) the delta-page survivor split the ledger bills to delta:cxl.
+    """
+    lv = pl.program_id(1)
+    ci = pl.program_id(2)
+    blk = pl.ds(ci * block_c, block_c)
+    params = params_ref[0]
+    y = packed_ref[0, 0].astype(jnp.int32)
+    qplanes = qplanes_ref[0]
+
+    @pl.when(lv == 0)
+    def _level0():
+        scal = scal0_ref[0]
+        est, est_raw, margin = _score_block(y, qplanes, scal, params)
+        lo, hi = _level0_bounds(est, est_raw, margin, params, bound)
+        est_s[blk] = est
+        lo_s[blk] = lo
+        hi_s[blk] = hi
+        alive_s[blk] = scal[:, 5]
+        delta_s[blk] = scal[:, 6]
+
+    @pl.when(lv > 0)
+    def _deeper():
+        est, lo, hi = _deeper_bounds(est_s[blk], y, qplanes,
+                                     lvls_ref[0, 0], params)
+        est_s[blk] = est
+        lo_s[blk] = lo
+        hi_s[blk] = hi
+
+    @pl.when(ci == n_blocks - 1)
+    def _prune_level():
+        # end of a level segment: every block's bounds are in scratch, so
+        # the pruning threshold (kth-smallest upper bound among survivors)
+        # is computable on-chip; carry it through SMEM and update the alive
+        # mask + survivor counters for the whole candidate set at once.
+        amask = alive_s[...] > 0.0
+        tau_s[lv] = _kth_smallest(jnp.where(amask, hi_s[...], jnp.inf), k)
+        alive_new = amask & (lo_s[...] <= tau_s[lv])
+        alive_s[...] = alive_new.astype(jnp.float32)
+        counts_out[0, lv] = jnp.sum(alive_new.astype(jnp.int32))
+        is_delta = delta_s[...] > 0.0
+        counts_out[0, num_levels + lv] = jnp.sum(
+            (alive_new & is_delta).astype(jnp.int32))
+
+    @pl.when(jnp.logical_and(lv == num_levels - 1, ci == n_blocks - 1))
+    def _emit():
+        est_out[0, :] = est_s[...]
+        alive_out[0, :] = (alive_s[...] > 0.0).astype(jnp.int32)
+
+
+def _fused_bounds_kernel(packed_ref, qplanes_ref, scal0_ref, lvls_ref,
+                         params_ref, est_out, lo_out, hi_out, est_s, *,
+                         num_levels: int, n_blocks: int, block_c: int,
+                         bound: str):
+    """Sharded variant: same single-launch VMEM level stacking, but emit
+    each level's certified (lo, hi) instead of masking on-chip — pruning
+    thresholds must be pooled ACROSS shards (a mesh collective), which
+    cannot run inside a kernel.  The caller's alive chain over these
+    bounds is arithmetically identical to ``_fused_kernel``'s."""
+    lv = pl.program_id(1)
+    ci = pl.program_id(2)
+    blk = pl.ds(ci * block_c, block_c)
+    params = params_ref[0]
+    y = packed_ref[0, 0].astype(jnp.int32)
+    qplanes = qplanes_ref[0]
+
+    @pl.when(lv == 0)
+    def _level0():
+        est, est_raw, margin = _score_block(y, qplanes, scal0_ref[0], params)
+        lo, hi = _level0_bounds(est, est_raw, margin, params, bound)
+        est_s[blk] = est
+        lo_out[0, 0] = lo
+        hi_out[0, 0] = hi
+
+    @pl.when(lv > 0)
+    def _deeper():
+        est, lo, hi = _deeper_bounds(est_s[blk], y, qplanes,
+                                     lvls_ref[0, 0], params)
+        est_s[blk] = est
+        lo_out[0, 0] = lo
+        hi_out[0, 0] = hi
+
+    @pl.when(lv == num_levels - 1)
+    def _emit():
+        est_out[0] = est_s[blk]
+
+
+def _fused_in_specs(block_c: int, g: int):
+    """Input block specs shared by both fused kernels (grid (Q, L, B))."""
+    return [
+        pl.BlockSpec((1, 1, block_c, g), lambda qi, lv, ci: (lv, qi, ci, 0)),
+        pl.BlockSpec((1, 5, g), lambda qi, lv, ci: (qi, 0, 0)),
+        pl.BlockSpec((1, block_c, 8), lambda qi, lv, ci: (qi, ci, 0)),
+        pl.BlockSpec((1, 1, block_c, 4), lambda qi, lv, ci: (lv, qi, ci, 0)),
+        pl.BlockSpec((1, 8), lambda qi, lv, ci: (qi, 0)),
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "bound", "block_c",
+                                             "interpret"))
+def ternary_refine_fused(packed: jax.Array, q_planes: jax.Array,
+                         scalars: jax.Array, level_scalars: jax.Array,
+                         params: jax.Array, *, k: int, bound: str,
+                         block_c: int = 512, interpret: bool | None = None
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Persistent multi-level refine: ALL TRQ levels in one launch.
+
+    packed (L, Q, C, G) uint8 per-level per-query gathered codes;
+    q_planes (Q, 5, G); scalars (Q, C, 8) f32
+    [d0, ||δ||², ⟨x_c,δ⟩, ||δ||, rho, valid, is_delta, ·];
+    level_scalars (L, Q, C, 4) f32 [proj, norm, rho, ·] (level-0 plane is
+    a placeholder — level 0 scores from ``scalars``); params (Q, 8) f32
+    [qn, w0..w3, bias, z·resid_std, resid_std].
+
+    Returns (est (Q, C) f32, alive (Q, C) int32, counts (Q, 2L) int32):
+    the final calibrated estimates, the post-level-(L−1) survivor mask,
+    and per-level survivor counts (total, then delta-split) — everything
+    the executor's ledger and rerank need, with no intermediate HBM
+    round-trips.  C must be a multiple of block_c (ops.py pads) and
+    ``k ≥ 1`` is the top-k pruning width.
+    """
+    l, nq, c, g = packed.shape
+    assert c % block_c == 0, (c, block_c)
+    nb = c // block_c
+    kernel = functools.partial(_fused_kernel, num_levels=l, n_blocks=nb,
+                               block_c=block_c, k=k, bound=bound)
+    return pl.pallas_call(
+        kernel,
+        grid=(nq, l, nb),
+        in_specs=_fused_in_specs(block_c, g),
+        out_specs=[
+            pl.BlockSpec((1, c), lambda qi, lv, ci: (qi, 0)),
+            pl.BlockSpec((1, c), lambda qi, lv, ci: (qi, 0)),
+            pl.BlockSpec((1, 2 * l), lambda qi, lv, ci: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, c), jnp.float32),
+            jax.ShapeDtypeStruct((nq, c), jnp.int32),
+            jax.ShapeDtypeStruct((nq, 2 * l), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((c,), jnp.float32),    # running estimate
+            pltpu.VMEM((c,), jnp.float32),    # certified lower bound
+            pltpu.VMEM((c,), jnp.float32),    # certified upper bound
+            pltpu.VMEM((c,), jnp.float32),    # alive mask (0/1)
+            pltpu.VMEM((c,), jnp.float32),    # delta-page flag (0/1)
+            pltpu.SMEM((l,), jnp.float32),    # per-level pruning thresholds
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(packed, q_planes, scalars, level_scalars, params)
+
+
+@functools.partial(jax.jit, static_argnames=("bound", "block_c",
+                                             "interpret"))
+def ternary_refine_fused_bounds(packed: jax.Array, q_planes: jax.Array,
+                                scalars: jax.Array,
+                                level_scalars: jax.Array,
+                                params: jax.Array, *, bound: str,
+                                block_c: int = 512,
+                                interpret: bool | None = None
+                                ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sharded form of ``ternary_refine_fused``: same inputs and the same
+    single-launch VMEM level stacking, returning (est (Q, C),
+    lo (Q, L, C), hi (Q, L, C)) so the caller can pool each level's
+    pruning threshold across a ``shard_map`` axis.  Bit-identical per
+    candidate to the fused kernel (the arithmetic is shared)."""
+    l, nq, c, g = packed.shape
+    assert c % block_c == 0, (c, block_c)
+    nb = c // block_c
+    kernel = functools.partial(_fused_bounds_kernel, num_levels=l,
+                               n_blocks=nb, block_c=block_c, bound=bound)
+    return pl.pallas_call(
+        kernel,
+        grid=(nq, l, nb),
+        in_specs=_fused_in_specs(block_c, g),
+        out_specs=[
+            pl.BlockSpec((1, block_c), lambda qi, lv, ci: (qi, ci)),
+            pl.BlockSpec((1, 1, block_c), lambda qi, lv, ci: (qi, lv, ci)),
+            pl.BlockSpec((1, 1, block_c), lambda qi, lv, ci: (qi, lv, ci)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, c), jnp.float32),
+            jax.ShapeDtypeStruct((nq, l, c), jnp.float32),
+            jax.ShapeDtypeStruct((nq, l, c), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((c,), jnp.float32),    # running estimate
+        ],
+        interpret=_resolve_interpret(interpret),
+    )(packed, q_planes, scalars, level_scalars, params)

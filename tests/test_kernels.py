@@ -9,8 +9,13 @@ from compat import given, settings, st
 
 from repro.core.packing import pack_ternary, packed_size
 from repro.core.ternary import ternary_encode
+from repro.core import trq as trq_mod
+from repro.anns import stages
+from repro.kernels import ops as kernel_ops
 from repro.kernels import ref
-from repro.kernels.ops import adc_scores, refine_scores
+from repro.kernels.ops import (VMEMBudgetError, adc_scores,
+                               fused_refine_bounds_batch,
+                               fused_refine_scores_batch, refine_scores)
 
 
 def _setup_refine(c, d, seed=0):
@@ -132,6 +137,206 @@ class TestBatchedRefineKernel:
         np.testing.assert_allclose(np.asarray(out),
                                    np.asarray(jnp.stack(per_query)),
                                    rtol=2e-5, atol=2e-5)
+
+
+def _setup_trq(seed, levels, n=400, d=24, nq=3, n_cents=8):
+    """Calibrated multi-level TRQ problem with the whole database as the
+    candidate set (so exact top-k is contained in it)."""
+    key = jax.random.PRNGKey(seed)
+    kx, kq, kc, kcal, kp = jax.random.split(key, 5)
+    x = jax.random.normal(kx, (n, d))
+    cents = jax.random.normal(kc, (n_cents, d))
+    assign = jnp.argmin(jnp.sum((x[:, None] - cents[None]) ** 2, -1), -1)
+    x_c = cents[assign]
+    codes, _ = trq_mod.encode_database(x, x_c, num_levels=levels)
+    qcal = jax.random.normal(kcal, (64, d))
+    pair = jax.random.randint(kp, (64,), 0, n)
+    codes = trq_mod.calibrate(codes, qcal, x, x_c, pair)
+    qs = jax.random.normal(kq, (nq, d))
+    ids = jnp.broadcast_to(jnp.arange(n)[None], (nq, n))
+    valid = jnp.ones((nq, n), bool)
+    d0 = jnp.sum((x_c[ids] - qs[:, None]) ** 2, -1)
+    d_true = jnp.sum((x[ids] - qs[:, None]) ** 2, -1)
+    return codes, qs, ids, valid, d0, d_true
+
+
+def _fused_args(codes, qs, ids, valid, d0, is_delta=None):
+    """Assemble the raw fused-wrapper argument tuple from a TRQ problem."""
+    sc = codes.scalars
+    if is_delta is None:
+        is_delta = jnp.zeros_like(valid)
+    return (jnp.stack([lv.packed[ids] for lv in codes.levels]), qs, d0,
+            sc.delta_sq[ids], sc.cross[ids], sc.norm[ids], sc.rho[ids],
+            valid, is_delta,
+            jnp.stack([lv.proj[ids] for lv in codes.levels]),
+            jnp.stack([lv.norm[ids] for lv in codes.levels]),
+            jnp.stack([lv.rho[ids] for lv in codes.levels]),
+            codes.model.w, codes.model.bias, codes.model.resid_std, 3.0)
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            inner = getattr(v, "jaxpr", None)
+            if inner is not None:
+                n += _count_pallas_calls(inner)
+    return n
+
+
+class TestFusedRefineKernel:
+    """The persistent multi-level kernel vs the reference refine chain."""
+
+    @pytest.mark.parametrize("bound", ["cauchy", "quantile"])
+    @pytest.mark.parametrize("levels", [1, 2, 3])
+    def test_matches_reference_backend(self, bound, levels):
+        codes, qs, ids, valid, d0, _ = _setup_trq(levels * 17, levels)
+        est_r, level_alive = stages._reference_refine(
+            qs, d0, ids, valid, codes, k=5, bound=bound, z=3.0)
+        est_p, alive_p, counters = stages._pallas_refine(
+            qs, d0, ids, valid, None, codes, k=5, bound=bound, z=3.0,
+            block_c=64, axis_name=None)
+        np.testing.assert_allclose(np.asarray(est_p), np.asarray(est_r),
+                                   rtol=3e-5, atol=3e-5)
+        assert jnp.array_equal(alive_p, level_alive[-1])
+        ref_counters = stages._level_counters(level_alive)
+        assert {k2: int(v) for k2, v in counters.items()} == \
+            {k2: int(v) for k2, v in ref_counters.items()}
+
+    @pytest.mark.parametrize("bound", ["cauchy", "quantile"])
+    def test_bounds_variant_bitwise_matches_onchip(self, bound):
+        """The sharded (bounds-emitting) form + the jnp alive chain must be
+        BIT-identical to the on-chip pruning form — that is what makes
+        sharded and unsharded pallas runs bit-identical."""
+        levels, k = 3, 5
+        codes, qs, ids, valid, d0, _ = _setup_trq(29, levels)
+        est_a, alive_a, _ = stages._pallas_refine(
+            qs, d0, ids, valid, None, codes, k=k, bound=bound, z=3.0,
+            block_c=64, axis_name=None)
+        args = _fused_args(codes, qs, ids, valid, d0)
+        est_b, lo, hi = fused_refine_bounds_batch(*args, bound=bound,
+                                                  block_c=64)
+        alive = valid
+        for lv in range(levels):
+            tau = stages._topk_threshold_batch(hi[:, lv], alive, k, None)
+            alive = alive & (lo[:, lv] <= tau[:, None])
+        assert jnp.array_equal(est_a, est_b)
+        assert jnp.array_equal(alive_a, alive)
+
+    def test_block_c_invariant(self):
+        """Candidate blocking must not change the survivor set or the
+        ledger counters (estimates may differ in ulps: XLA picks its f32
+        reduction strategy per block shape)."""
+        codes, qs, ids, valid, d0, _ = _setup_trq(31, 2)
+        outs = [stages._pallas_refine(qs, d0, ids, valid, None, codes, k=5,
+                                      bound="cauchy", z=3.0, block_c=bc,
+                                      axis_name=None)
+                for bc in (64, 128, 512)]
+        for est, alive, counters in outs[1:]:
+            np.testing.assert_allclose(np.asarray(est),
+                                       np.asarray(outs[0][0]),
+                                       rtol=1e-6, atol=1e-6)
+            assert jnp.array_equal(alive, outs[0][1])
+            assert {k2: int(v) for k2, v in counters.items()} == \
+                {k2: int(v) for k2, v in outs[0][2].items()}
+
+    def test_delta_survivor_counts(self):
+        """The kernel's delta-split counters must equal the mask-chain
+        arithmetic the reference backend uses."""
+        codes, qs, ids, valid, d0, _ = _setup_trq(37, 3)
+        is_delta = jax.random.bernoulli(jax.random.PRNGKey(5), 0.3,
+                                        valid.shape)
+        _, level_alive = stages._reference_refine(
+            qs, d0, ids, valid, codes, k=5, bound="cauchy", z=3.0)
+        expect = stages._level_counters(level_alive, is_delta)
+        _, _, counters = stages._pallas_refine(
+            qs, d0, ids, valid, is_delta, codes, k=5, bound="cauchy",
+            z=3.0, block_c=64, axis_name=None)
+        assert {k2: int(v) for k2, v in counters.items()} == \
+            {k2: int(v) for k2, v in expect.items()}
+
+    @pytest.mark.parametrize("axis_name", [None, "search"])
+    def test_single_kernel_launch(self, axis_name):
+        """All TRQ levels run as ONE pallas_call per micro-batch — no
+        per-level launches, in both the unsharded and sharded forms."""
+        codes, qs, ids, valid, d0, _ = _setup_trq(41, 3)
+        if axis_name is None:
+            fn = lambda *a: stages._pallas_refine(
+                *a, None, codes, k=5, bound="cauchy", z=3.0, block_c=64,
+                axis_name=None)
+            jaxpr = jax.make_jaxpr(fn)(qs, d0, ids, valid)
+        else:
+            args = _fused_args(codes, qs, ids, valid, d0)
+            jaxpr = jax.make_jaxpr(
+                lambda *a: fused_refine_bounds_batch(
+                    *a, bound="cauchy", block_c=64))(*args)
+        assert _count_pallas_calls(jaxpr.jaxpr) == 1
+
+    def test_vmem_budget_named_error(self):
+        codes, qs, ids, valid, d0, _ = _setup_trq(43, 2)
+        args = _fused_args(codes, qs, ids, valid, d0)
+        with pytest.raises(VMEMBudgetError, match="VMEM"):
+            fused_refine_scores_batch(*args, k=5, bound="cauchy",
+                                      block_c=1 << 22)
+        with pytest.raises(VMEMBudgetError, match="VMEM"):
+            fused_refine_bounds_batch(*args, bound="cauchy",
+                                      block_c=1 << 22)
+
+    def test_interpret_auto_detection(self):
+        """Direct kernel calls (no interpret kwarg) must auto-detect the
+        backend instead of silently interpreting on TPU."""
+        from repro.kernels import ternary_refine as tr
+        assert tr._resolve_interpret(None) == (not tr._ON_TPU)
+        assert tr._resolve_interpret(True) is True
+        assert tr._resolve_interpret(False) is False
+        args = _setup_refine(64, 20, seed=9)
+        packed, q, d0, delta_sq, cross, norm, rho, w, bias = args
+        q_planes = ref.make_query_planes(q, packed.shape[1])
+        scalars = jnp.stack([d0, delta_sq, cross, norm, rho] +
+                            [jnp.zeros_like(d0)] * 3, axis=-1)
+        params = jnp.concatenate(
+            [jnp.linalg.norm(q)[None], w, bias[None],
+             jnp.zeros((2,))])[None, :]
+        out = tr.ternary_refine(packed, q_planes, scalars, params,
+                                block_c=64)
+        expect = ref.ternary_refine_ref(*args)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestCertificationSoundness:
+    """Early-exit certification property: across bounds, level depths and
+    seeds, NO true top-k member (exact L2 over the candidate set) is ever
+    pruned by any level's alive mask — fused kernel and reference chain."""
+
+    @given(st.sampled_from(["cauchy", "quantile"]), st.integers(1, 3),
+           st.integers(0, 99))
+    @settings(max_examples=12, deadline=None)
+    def test_no_true_topk_pruned(self, bound, levels, seed):
+        k = 5
+        codes, qs, ids, valid, d0, d_true = _setup_trq(seed, levels)
+        _, top = jax.lax.top_k(-d_true, k)
+        _, level_alive = stages._reference_refine(
+            qs, d0, ids, valid, codes, k=k, bound=bound, z=3.0)
+        for m in level_alive:                      # every level's mask
+            assert bool(jnp.all(jnp.take_along_axis(m, top, axis=1)))
+        _, alive_p, _ = stages._pallas_refine(
+            qs, d0, ids, valid, None, codes, k=k, bound=bound, z=3.0,
+            block_c=64, axis_name=None)
+        assert bool(jnp.all(jnp.take_along_axis(alive_p, top, axis=1)))
+        # the fused kernel's intermediate masks are the bounds variant's
+        # alive chain (bit-identical, see TestFusedRefineKernel) — check
+        # them level by level as well
+        args = _fused_args(codes, qs, ids, valid, d0)
+        _, lo, hi = fused_refine_bounds_batch(*args, bound=bound,
+                                              block_c=64)
+        alive = valid
+        for lv in range(levels):
+            tau = stages._topk_threshold_batch(hi[:, lv], alive, k, None)
+            alive = alive & (lo[:, lv] <= tau[:, None])
+            assert bool(jnp.all(jnp.take_along_axis(alive, top, axis=1)))
 
 
 class TestADCKernel:

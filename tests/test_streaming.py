@@ -221,6 +221,42 @@ class TestStreamingBasics:
         assert t.bytes == t.accesses * max(lay.far_bytes, 64)
 
 
+class TestDeeperLevelDeltaSplit:
+    """Level ℓ≥1 survivor traffic for delta-page candidates is billed to
+    ``delta:cxl`` (not the shared ``refine:cxl``), identically in both
+    refine backends."""
+
+    def test_split_pinned_both_backends(self, ds):
+        from repro.anns import registry
+        cfg = PipelineConfig(dim=32, pq_m=4, pq_k=32, nlist=8, nprobe=4,
+                             final_k=5, refine_budget=20, trq_levels=2)
+        base = build(jax.random.PRNGKey(3), ds.x[:1500], cfg)
+        st = fresh(base)
+        st.insert(ds.x[1500:1900])
+
+        # counter ground truth straight from the stage contracts
+        fs = registry.make_front("ivf", "streaming", st)
+        cand = fs.candidates(ds.queries)
+        refined = registry.make_backend("reference").refine(
+            ds.queries, cand, st.trq, k=5, bound=cfg.bound, z=cfg.z)
+        counts = {n: int(v) for n, v in {**cand.counters,
+                                         **refined.counters}.items()}
+        n_delta = counts["delta_cand"]
+        l1, l1d = counts["refine_alive_l1"], counts["refine_alive_l1_delta"]
+        assert n_delta > 0 and l1d > 0          # the split is exercised
+
+        ids_ref, cost_ref = st.search(ds.queries, k=5)
+        ids_pal, cost_pal = st.search(ds.queries, k=5, backend="pallas")
+        assert jnp.array_equal(ids_ref, ids_pal)
+        assert _ledger_dict(cost_ref) == _ledger_dict(cost_pal)
+
+        t_delta = cost_ref.ledger["delta:cxl"]
+        t_refine = cost_ref.ledger["refine:cxl"]
+        assert t_delta.accesses == n_delta + l1d
+        assert t_refine.accesses == \
+            (counts["front_cand"] - n_delta) + (l1 - l1d)
+
+
 class TestDrift:
     def test_tombstone_trigger(self, ds, base_index):
         st = fresh(base_index, max_tombstone_frac=0.1)
