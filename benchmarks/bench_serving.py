@@ -1,0 +1,121 @@
+"""Serving-engine benchmark: open-loop Poisson arrivals through the
+continuous-batching ``ServingEngine`` (serving/scheduler.py) vs the
+one-query-at-a-time ``Retriever`` baseline, at matched offered load.
+
+Three configurations per offered rate:
+
+* ``single``  — batching off (max_batch=1): every request dispatches
+  alone, the baseline a naive serving frontend gets from ``Retriever``.
+* ``batched`` — continuous batching on (coalescer + double-buffered
+  front/refine dispatch), result cache off.
+* ``batched_cache`` — batching plus the query-result cache; the query
+  pool repeats (Zipf-ish head) so a realistic fraction short-circuits.
+
+Latency is virtual-clock microseconds from the Table-I tier model (the
+same modeled time every other figure uses): arrivals are a seeded
+Poisson process, the scheduler is a discrete-event simulation, so every
+record is exactly reproducible.  Emitted per (config, rate):
+``serving_{config}_rps{rate}`` with p50 in the us_per_call slot and
+p99 / sustained QPS / offered rate / batch stats in the fields.
+
+Standalone: ``python benchmarks/bench_serving.py --devices 8`` fakes 8
+host devices (set before jax initializes) and runs the sharded plan;
+``--requests N --rates a,b,...`` sizes the trace.  Writes
+``BENCH_bench_serving.json``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+if __name__ == "__main__":          # must run BEFORE anything imports jax
+    import argparse
+    import os
+
+    _ap = argparse.ArgumentParser()
+    _ap.add_argument("--devices", type=int, default=None,
+                     help="fake this many host devices and shard the plan "
+                          "across them")
+    _ap.add_argument("--requests", type=int, default=96,
+                     help="requests per (config, rate) trace")
+    _ap.add_argument("--rates", type=str, default="2000,8000",
+                     help="comma-separated offered loads (requests/s)")
+    _CLI_ARGS = _ap.parse_args()
+    if _CLI_ARGS.devices and _CLI_ARGS.devices > 1 and \
+            "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={_CLI_ARGS.devices}"
+        ).strip()
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [os.path.join(_root, "src"), _root]
+
+import jax
+import numpy as np
+
+from benchmarks.common import dataset, emit, fatrq_index, write_json
+from repro.serving import QueryPlan, Request, ResultCache, ServingEngine
+
+_MAX_BATCH = 8
+_POOL = 24          # distinct queries in the arrival mix (repeats → hits)
+
+
+def _trace(ds, *, n_requests: int, rate_rps: float, seed: int = 0):
+    """Seeded open-loop Poisson trace over a repeating query pool."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1e6 / rate_rps, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    pool = np.asarray(ds.queries[:_POOL])
+    picks = rng.integers(0, _POOL, size=n_requests)
+    return [Request(query=pool[picks[i]], arrival_us=float(arrivals[i]),
+                    rid=i)
+            for i in range(n_requests)]
+
+
+def _run_config(index, ds, *, name: str, rate_rps: float, n_requests: int,
+                batching: bool, cache: bool, shards: int | None) -> None:
+    plan = QueryPlan(shards=shards) if shards and shards > 1 else None
+    eng = ServingEngine(
+        index, plan=plan, max_batch=_MAX_BATCH, max_wait_us=200.0,
+        batching=batching, overlap=batching,  # the baseline is strictly
+        # serial: one blocking Retriever call per request, nothing to
+        # double-buffer against
+        cache=ResultCache(capacity=256) if cache else None)
+    reqs = _trace(ds, n_requests=n_requests, rate_rps=rate_rps)
+    resp = eng.run(reqs)
+    lat = np.array([r.latency_us for r in resp])
+    span_s = (max(r.done_us for r in resp) - reqs[0].arrival_us) / 1e6
+    emit(f"serving_{name}_rps{int(rate_rps)}",
+         float(np.percentile(lat, 50)),
+         f"p99={np.percentile(lat, 99):.0f}us;"
+         f"qps={len(resp) / span_s:.0f};batches={eng.stats.batches}",
+         cost=eng.total_cost, plan=eng.base_plan,
+         p99_us=float(np.percentile(lat, 99)),
+         qps_sustained=len(resp) / span_s,
+         offered_rps=rate_rps, n_requests=n_requests,
+         batches=eng.stats.batches,
+         cache_hits=eng.stats.cache_hits,
+         padded_slots=eng.stats.padded_slots,
+         devices=shards or 1)
+
+
+def run(*, devices: int | None = None, n_requests: int = 96,
+        rates=(2000.0, 8000.0)) -> None:
+    ds, index = fatrq_index()
+    avail = len(jax.devices())
+    shards = min(devices or 1, avail)
+    for rate in rates:
+        for name, batching, cache in (("single", False, False),
+                                      ("batched", True, False),
+                                      ("batched_cache", True, True)):
+            _run_config(index, ds, name=name, rate_rps=float(rate),
+                        n_requests=n_requests, batching=batching,
+                        cache=cache, shards=shards)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(devices=_CLI_ARGS.devices, n_requests=_CLI_ARGS.requests,
+        rates=[float(r) for r in _CLI_ARGS.rates.split(",")])
+    write_json("bench_serving")

@@ -44,14 +44,14 @@ def main():
     prompts = jax.random.randint(jax.random.PRNGKey(3), (4, 8), 0,
                                  cfg.vocab)
     print("serving 4 batched RAG requests...")
-    gen, retrieved, cost = rag_answer(engine, db.index, embed_fn, prompts,
-                                      k=5, decode_steps=8,
-                                      retriever=retriever)
+    res = rag_answer(engine, db.index, embed_fn, prompts,
+                     k=5, decode_steps=8, retriever=retriever)
     print(f"  resolved plan: {retriever.default_plan().resolve(pcfg)}")
-    print(f"  retrieved ids (per request): {retrieved.tolist()}")
-    print(f"  generated tokens: {gen.tolist()}")
+    print(f"  retrieved ids (per request): {res.ids.tolist()}")
+    print(f"  generated tokens: {res.tokens.tolist()}")
+    print(f"  degraded by QoS: {res.degraded}")
     print(f"  retrieval cost breakdown: "
-          f"{ {k: f'{v * 1e6:.1f}us' for k, v in cost.breakdown().items()} }")
+          f"{ {k: f'{v * 1e6:.1f}us' for k, v in res.cost.breakdown().items()} }")
     print(f"  running ledger (capacity view): "
           f"{ {k: t.accesses for k, t in retriever.total_cost.ledger.items()} }")
     print(f"  engine stats: {engine.stats}")

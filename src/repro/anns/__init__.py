@@ -43,7 +43,8 @@ Layers, bottom-up:
   to their pre-plan-layer behavior.
 """
 
-from repro.anns.api import Database, PlanError, QueryPlan, SearchResult
+from repro.anns.api import (CompiledPlan, Database, PlanError, QueryPlan,
+                            SearchResult)
 from repro.anns.executor import SearchExecutor, make_executor
 from repro.anns.pipeline import (FaTRQIndex, PipelineConfig, baseline_search,
                                  build, recall_at_k, search)
@@ -57,7 +58,8 @@ from repro.anns.streaming import StreamingConfig, StreamingIndex
 
 __all__ = ["FaTRQIndex", "PipelineConfig", "baseline_search", "build",
            "recall_at_k", "search",
-           "Database", "QueryPlan", "SearchResult", "PlanError",
+           "CompiledPlan", "Database", "QueryPlan", "SearchResult",
+           "PlanError",
            "register_front", "register_backend",
            "SearchExecutor", "make_executor",
            "ShardedExecutor", "ShardedIndex", "make_sharded_executor",

@@ -58,7 +58,8 @@ from repro.anns.sharding import ShardedExecutor, ShardedIndex, \
 from repro.anns.streaming import StreamingIndex
 from repro.memory import QueryCost
 
-__all__ = ["Database", "QueryPlan", "SearchResult", "PlanError"]
+__all__ = ["CompiledPlan", "Database", "QueryPlan", "SearchResult",
+           "PlanError"]
 
 
 @dataclass(frozen=True)
@@ -109,6 +110,68 @@ class SearchResult:
     distances: jax.Array    # (Q, k) f32 — exact squared L2 of ``ids``
     cost: QueryCost         # the Table-I traffic ledger
     plan: QueryPlan         # resolved plan (fully specified, hashable)
+
+
+@dataclass
+class CompiledPlan:
+    """A validated plan bound to its compiled executor at one index
+    generation — the serving engine's dispatch handle.
+
+    ``Database.compiled(plan)`` resolves + validates once and returns this
+    wrapper; calling it again after a ``StreamingIndex`` mutation returns
+    a fresh handle for the new generation (the underlying executor cache
+    is generation-keyed).  ``run_front``/``run_finish`` expose the staged
+    executor's front/refine boundary for double-buffered dispatch — the
+    two calls together are exactly ``execute`` on one micro-batch, so
+    split dispatch stays bit-identical to ``db.query``.  Layouts without
+    a split surface (the sharded shard_map body fuses both stages in one
+    launch) report ``supports_split == False``; dispatch whole batches
+    through ``execute`` there.
+    """
+
+    db: "Database"
+    plan: QueryPlan          # fully resolved
+    generation: int          # index generation at compile time
+    _ex: object
+    _gid: jax.Array | None   # row → global id postmap (streaming layouts)
+
+    @property
+    def supports_split(self) -> bool:
+        return hasattr(self._ex, "run_front")
+
+    def execute(self, queries: jax.Array, *, pad: bool = False,
+                cost: QueryCost | None = None) -> SearchResult:
+        """Whole-batch dispatch (front + refine + rerank + fold)."""
+        if self.plan.mode == "baseline":
+            ids, dists, out = self._ex.execute_baseline(
+                queries, k=self.plan.k, pad=pad)
+            if cost is not None:
+                out = cost.merge(out)
+        else:
+            ids, dists, out = self._ex.execute(queries, k=self.plan.k,
+                                               cost=cost, pad=pad)
+        if self._gid is not None:
+            ids = self._gid[ids]
+        return SearchResult(ids=ids, distances=dists, cost=out,
+                            plan=self.plan)
+
+    def run_front(self, chunk: jax.Array, *,
+                  qvalid: jax.Array | None = None):
+        """Stage 1: candidate generation for ONE micro-batch (≤ the
+        plan's ``micro_batch``); returns the device-side ``Candidates``
+        handle to pass to ``run_finish``."""
+        return self._ex.run_front(chunk, qvalid=qvalid)
+
+    def run_finish(self, chunk: jax.Array, cand, *,
+                   cost: QueryCost | None = None) -> SearchResult:
+        """Stage 2: refine + rerank + ledger fold for a ``run_front``
+        result, mapped to global ids."""
+        ids, dists, out = self._ex.run_finish(chunk, cand, k=self.plan.k,
+                                              cost=cost)
+        if self._gid is not None:
+            ids = self._gid[ids]
+        return SearchResult(ids=ids, distances=dists, cost=out,
+                            plan=self.plan)
 
 
 def _layout_of(index) -> str:
@@ -234,6 +297,18 @@ class Database:
         rp = self.validate(plan)
         return self._compile(rp, mesh)[0]
 
+    def compiled(self, plan: QueryPlan | None = None, *,
+                 mesh=None) -> CompiledPlan:
+        """Validate + compile ``plan`` and return the ``CompiledPlan``
+        dispatch handle (executor + global-id postmap + the generation it
+        was compiled against).  The serving engine calls this per batch:
+        cache hits make it O(1), and a streaming generation bump
+        transparently recompiles."""
+        rp = self.validate(plan)
+        ex, gid_map = self._compile(rp, mesh)
+        return CompiledPlan(db=self, plan=rp, generation=self.generation,
+                            _ex=ex, _gid=gid_map)
+
     def _compile(self, rp: QueryPlan, mesh=None) -> tuple:
         """Resolved+validated plan → (executor, gid postmap | None).
 
@@ -289,17 +364,24 @@ class Database:
 
     def query(self, queries: jax.Array, *, plan: QueryPlan | None = None,
               k: int | None = None, micro_batch: int | None = None,
+              refine_budget: int | None = None, bucket: bool = False,
               cost: QueryCost | None = None, mesh=None) -> SearchResult:
         """Planned search → ``SearchResult``.
 
-        ``k`` and ``micro_batch`` are per-call overrides of the plan (a
-        serving layer keeps one plan and varies k / batching per request).
-        A ``k`` override re-derives the SSD refine budget unless the
-        plan's budget was pinned independently of its own k — otherwise
-        reusing an already-resolved plan (e.g. ``result.plan``) with a
-        larger k would silently keep the budget resolved for the OLD k
-        and starve the rerank.  ``cost`` merges the call's traffic into
-        an existing ledger, exactly like the executor surfaces it shims.
+        ``k``, ``micro_batch`` and ``refine_budget`` are per-call
+        overrides of the plan (a serving layer keeps one plan and varies
+        k / batching / refine depth per request — per-tenant QoS maps
+        token budgets onto ``refine_budget``).  A ``k`` override
+        re-derives the SSD refine budget unless the plan's budget was
+        pinned independently of its own k — otherwise reusing an
+        already-resolved plan (e.g. ``result.plan``) with a larger k
+        would silently keep the budget resolved for the OLD k and starve
+        the rerank.  ``bucket=True`` pads ragged query chunks to
+        power-of-two buckets (``executor.bucket_for``) so variable batch
+        sizes reuse a fixed set of compiled shapes — results and ledger
+        are bit-identical either way.  ``cost`` merges the call's traffic
+        into an existing ledger, exactly like the executor surfaces it
+        shims.
         """
         p = plan or QueryPlan()
         if k is not None:
@@ -307,16 +389,20 @@ class Database:
                 p.refine_budget == search_budget(self.config, p.k)
             p = dataclasses.replace(
                 p, k=k, refine_budget=None if stale else p.refine_budget)
+        if refine_budget is not None:
+            p = dataclasses.replace(p, refine_budget=refine_budget)
         if micro_batch is not None:
             p = dataclasses.replace(p, micro_batch=micro_batch)
         rp = self.validate(p)
         ex, gid_map = self._compile(rp, mesh)
         if rp.mode == "baseline":
-            ids, dists, out_cost = ex.execute_baseline(queries, k=rp.k)
+            ids, dists, out_cost = ex.execute_baseline(queries, k=rp.k,
+                                                       pad=bucket)
             if cost is not None:
                 out_cost = cost.merge(out_cost)
         else:
-            ids, dists, out_cost = ex.execute(queries, k=rp.k, cost=cost)
+            ids, dists, out_cost = ex.execute(queries, k=rp.k, cost=cost,
+                                              pad=bucket)
         if gid_map is not None:
             ids = gid_map[ids]
         return SearchResult(ids=ids, distances=dists, cost=out_cost,

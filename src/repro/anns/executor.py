@@ -65,6 +65,37 @@ def iter_chunks(queries: jax.Array, micro_batch: int | None):
         yield queries[i:i + micro_batch]
 
 
+def bucket_for(n: int, micro_batch: int | None = None) -> int:
+    """Smallest compiled batch bucket covering ``n`` queries.
+
+    Buckets are powers of two, capped at ``micro_batch`` (the full-chunk
+    shape, which is always compiled anyway).  Padding ragged chunks up to
+    a bucket keeps the set of traced query shapes at
+    {1, 2, 4, ..., micro_batch} regardless of caller batch sizes, so a
+    serving layer coalescing variable-size request batches NEVER
+    recompiles the stage jits per batch."""
+    b = 1
+    while b < n:
+        b <<= 1
+    if micro_batch is not None and b > micro_batch >= n:
+        b = micro_batch
+    return b
+
+
+def pad_chunk(chunk: jax.Array, bucket: int
+              ) -> tuple[jax.Array, jax.Array]:
+    """Zero-pad a (n, D) chunk to ``bucket`` rows; returns the padded
+    chunk plus the (bucket,) per-query validity mask.  The mask is always
+    a device ARRAY (all-True when n == bucket) so full and padded batches
+    of the same bucket share one trace."""
+    n = chunk.shape[0]
+    qvalid = jnp.arange(bucket) < n
+    if n == bucket:
+        return chunk, qvalid
+    pad = jnp.zeros((bucket - n,) + chunk.shape[1:], chunk.dtype)
+    return jnp.concatenate([chunk, pad], axis=0), qvalid
+
+
 def _collect(counters: Counters) -> dict[str, int]:
     """The single device→host transfer of a search call."""
     return {n: int(v) for n, v in
@@ -106,11 +137,32 @@ class SearchExecutor:
     def _chunks(self, queries: jax.Array):
         return iter_chunks(queries, self.micro_batch)
 
+    def _refine_rerank(self, chunk: jax.Array, cand, *, k: int, budget: int
+                       ) -> tuple[jax.Array, jax.Array, Counters]:
+        """Refine + SSD rerank over a front-stage result: the shared tail
+        of ``execute`` and ``run_finish``."""
+        cfg = self.index.config
+        refined = self.backend.refine(chunk, cand, self.index.trq,
+                                      k=k, bound=cfg.bound, z=cfg.z)
+        topk, topk_d, n_ssd = stages_mod._rerank_survivors(
+            self.index.x, chunk, cand.ids, refined.est, refined.alive,
+            k=k, budget=budget)
+        counters = dict(cand.counters)
+        _accumulate(counters, refined.counters)
+        _accumulate(counters, {"ssd_fetch": n_ssd})
+        return topk, topk_d, counters
+
     def execute(self, queries: jax.Array, *, k: int | None = None,
-                cost: QueryCost | None = None
+                cost: QueryCost | None = None, pad: bool = False
                 ) -> tuple[jax.Array, jax.Array, QueryCost]:
         """FaTRQ search: (Q, k) ids, (Q, k) exact squared-L2 distances,
-        and the folded traffic ledger."""
+        and the folded traffic ledger.
+
+        ``pad=True`` pads every ragged chunk to its power-of-two bucket
+        (``bucket_for``) with a per-query validity mask, so variable batch
+        sizes reuse a fixed set of compiled shapes; padded rows produce no
+        candidates and no counters, keeping results AND ledger
+        bit-identical to the unpadded path."""
         cfg = self.index.config
         k = k or cfg.final_k
         budget = search_budget(cfg, k, self.refine_budget)
@@ -119,20 +171,48 @@ class SearchExecutor:
         dist_parts: list[jax.Array] = []
         counters: Counters = {}
         for chunk in self._chunks(queries):
-            cand = self.front.candidates(chunk)
-            refined = self.backend.refine(chunk, cand, self.index.trq,
-                                          k=k, bound=cfg.bound, z=cfg.z)
-            topk, topk_d, n_ssd = stages_mod._rerank_survivors(
-                self.index.x, chunk, cand.ids, refined.est, refined.alive,
-                k=k, budget=budget)
+            n = chunk.shape[0]
+            if pad:
+                chunk, qvalid = pad_chunk(
+                    chunk, bucket_for(n, self.micro_batch))
+            else:
+                qvalid = None
+            cand = self.front.candidates(chunk, qvalid=qvalid)
+            topk, topk_d, cnt = self._refine_rerank(chunk, cand, k=k,
+                                                    budget=budget)
+            if topk.shape[0] != n:             # drop padded rows
+                topk, topk_d = topk[:n], topk_d[:n]
             topk_parts.append(topk)
             dist_parts.append(topk_d)
-            _accumulate(counters, cand.counters)
-            _accumulate(counters, refined.counters)
-            _accumulate(counters, {"ssd_fetch": n_ssd})
+            _accumulate(counters, cnt)
 
         cost = self._fold(counters, cost)
         return _cat(topk_parts), _cat(dist_parts), cost
+
+    # -- staged surface (serving engine's double-buffered dispatch) -------
+
+    def run_front(self, chunk: jax.Array, *,
+                  qvalid: jax.Array | None = None):
+        """Front stage only, for ONE micro-batch (no chunking): candidate
+        generation is enqueued on the device and returned as a
+        ``Candidates`` handle.  The serving engine issues this for batch
+        N+1 while batch N's ``run_finish`` (refine + rerank) drains —
+        JAX's async dispatch overlaps the two stages on device."""
+        return self.front.candidates(chunk, qvalid=qvalid)
+
+    def run_finish(self, chunk: jax.Array, cand, *, k: int | None = None,
+                   cost: QueryCost | None = None
+                   ) -> tuple[jax.Array, jax.Array, QueryCost]:
+        """Refine + rerank + ledger fold for a ``run_front`` result.
+        Together with ``run_front`` this is exactly ``execute`` on one
+        chunk — same stages, same counters, same fold — so split dispatch
+        stays bit-identical to the monolithic call."""
+        cfg = self.index.config
+        k = k or cfg.final_k
+        budget = search_budget(cfg, k, self.refine_budget)
+        topk, topk_d, counters = self._refine_rerank(chunk, cand, k=k,
+                                                     budget=budget)
+        return topk, topk_d, self._fold(counters, cost)
 
     def search(self, queries: jax.Array, *, k: int | None = None,
                cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
@@ -140,7 +220,8 @@ class SearchExecutor:
         ids, _, cost = self.execute(queries, k=k, cost=cost)
         return ids, cost
 
-    def execute_baseline(self, queries: jax.Array, *, k: int | None = None
+    def execute_baseline(self, queries: jax.Array, *, k: int | None = None,
+                         pad: bool = False
                          ) -> tuple[jax.Array, jax.Array, QueryCost]:
         """SoTA baseline (cuVS/FAISS style): front stage, then exact rerank
         of the FULL candidate list from SSD — no far-memory refinement."""
@@ -150,9 +231,17 @@ class SearchExecutor:
         dist_parts: list[jax.Array] = []
         counters: Counters = {}
         for chunk in self._chunks(queries):
-            cand = self.front.candidates(chunk)
+            n = chunk.shape[0]
+            if pad:
+                chunk, qvalid = pad_chunk(
+                    chunk, bucket_for(n, self.micro_batch))
+            else:
+                qvalid = None
+            cand = self.front.candidates(chunk, qvalid=qvalid)
             topk, topk_d, n_valid = stages_mod._rerank_all(
                 self.index.x, chunk, cand.ids, cand.valid, k=k)
+            if topk.shape[0] != n:             # drop padded rows
+                topk, topk_d = topk[:n], topk_d[:n]
             topk_parts.append(topk)
             dist_parts.append(topk_d)
             _accumulate(counters, cand.counters)

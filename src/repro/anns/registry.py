@@ -61,10 +61,13 @@ class ShardedFrontHooks:
       the database into per-shard row sets plus the front's own replicated
       (``rep``) and shard-stacked (``db``) array pytrees and a hashable
       tuple of static traversal args.
-    * ``body(queries, rep, db, codebook, pq_codes, **args) -> Candidates``
-      — the front's candidate generation inside the shard_map body (free
-      to use collectives over the mesh axis, e.g. the graph front's
-      per-hop frontier exchange).
+    * ``body(queries, rep, db, codebook, pq_codes, *, qvalid=None,
+      **args) -> Candidates`` — the front's candidate generation inside
+      the shard_map body (free to use collectives over the mesh axis,
+      e.g. the graph front's per-hop frontier exchange).  ``qvalid`` is
+      the replicated per-query validity mask of the bucket-padded entry
+      (``executor.pad_chunk``): padded rows must yield no candidates and
+      no counter contributions on any shard.
     * ``fold(cost, counts, layout)`` — the front's per-shard ledger fold.
     """
 

@@ -73,8 +73,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.anns import registry
-from repro.anns.executor import (_accumulate, _cat, fold_counts,
-                                 iter_chunks, search_budget)
+from repro.anns.executor import (_accumulate, _cat, bucket_for, fold_counts,
+                                 iter_chunks, pad_chunk, search_budget)
 from repro.anns.stages import (Candidates, Counters, adc_score,
                                fold_graph_front_cost, fold_ivf_front_cost,
                                graph_for, rank_centroid_lists)
@@ -325,9 +325,11 @@ def partition_database(index, n_shards: int,
 
 
 def _ivf_shard_front(queries, rep, fdb, codebook, pq_codes, *,
-                     nprobe: int) -> Candidates:
+                     qvalid=None, nprobe: int) -> Candidates:
     """IVF front inside the shard_map body: rank the replicated centroid
-    table globally, gather only the chosen lists this shard owns."""
+    table globally, gather only the chosen lists this shard owns.
+    ``qvalid`` (replicated (Q,) mask) zeroes padded query rows out of the
+    candidate set and the counters — see ``stages.FrontStage``."""
     (centroids,) = rep
     list_gid, lists = fdb
     nq = queries.shape[0]
@@ -347,15 +349,17 @@ def _ivf_shard_front(queries, rep, fdb, codebook, pq_codes, *,
     sel = jnp.take_along_axis(chosen, slot, axis=1)           # (Q, pl)
     ids_l = lists[slot]                                       # (Q, pl, cap)
     valid = ((ids_l >= 0) & sel[:, :, None]).reshape(nq, pl * cap)
+    if qvalid is not None:
+        valid = valid & qvalid[:, None]
     ids = jnp.maximum(ids_l.reshape(nq, pl * cap), 0)
     d0 = adc_score(codebook, pq_codes[ids], queries, valid)
     return Candidates(ids=ids, valid=valid, d0=d0,
                       counters={"front_cand": jnp.sum(valid)})
 
 
-def _graph_shard_front(queries, rep, fdb, codebook, pq_codes, *, beam: int,
-                       iters: int, expand: int, n: int,
-                       degree: int) -> Candidates:
+def _graph_shard_front(queries, rep, fdb, codebook, pq_codes, *,
+                       qvalid=None, beam: int, iters: int, expand: int,
+                       n: int, degree: int) -> Candidates:
     """Graph front inside the shard_map body: replicated beam, per-hop
     frontier exchange over the halo-partitioned subgraphs.
 
@@ -404,7 +408,8 @@ def _graph_shard_front(queries, rep, fdb, codebook, pq_codes, *, beam: int,
         nd = jnp.sum((xs_loc[adj_loc[pls]]
                       - queries[:, None, None, :]) ** 2, axis=-1)
         nd = jax.lax.psum(jnp.where(own[..., None], nd, 0.0), AXIS)
-        hops = hops + jnp.sum(own.astype(jnp.int32))
+        hop_own = own if qvalid is None else own & qvalid[:, None]
+        hops = hops + jnp.sum(hop_own.astype(jnp.int32))
         ids, ds, expanded = jax.vmap(
             partial(graph_mod.beam_merge, beam=beam))(
             ids, ds, expanded, neigh.reshape(nq, -1), nd.reshape(nq, -1))
@@ -418,6 +423,8 @@ def _graph_shard_front(queries, rep, fdb, codebook, pq_codes, *, beam: int,
 
     lfin = loc_of[beam_ids]
     valid = lfin >= 0                                         # owned slots
+    if qvalid is not None:
+        valid = valid & qvalid[:, None]
     ids_local = jnp.maximum(lfin, 0)
     d0 = adc_score(codebook, pq_codes[ids_local], queries, valid)
     return Candidates(ids=ids_local, valid=valid, d0=d0,
@@ -470,16 +477,18 @@ def _rerank_survivors_sharded(x, gid, queries, ids, est, alive, *, k: int,
     return d, fetch_gid, jnp.sum(fetch_alive)
 
 
-def _shard_body(queries, front_rep, codebook, model, front_db, rec_db, *,
-                dim: int, k: int, budget: int, bound: str, z: float,
-                backend: str, front: str, front_args: tuple):
+def _shard_body(queries, qvalid, front_rep, codebook, model, front_db,
+                rec_db, *, dim: int, k: int, budget: int, bound: str,
+                z: float, backend: str, front: str, front_args: tuple):
     """One shard's front → refine → rerank, with globalized decisions.
 
-    Runs under shard_map: ``queries``/``front_rep``/``codebook``/``model``
-    are replicated; ``front_db``/``rec_db`` leaves carry a leading
-    length-1 shard-block dim.  The front's candidate generation comes from
-    its registered ``ShardedFrontHooks.body``; refine, rerank and the
-    cross-shard merge are front-agnostic.
+    Runs under shard_map: ``queries``/``qvalid``/``front_rep``/
+    ``codebook``/``model`` are replicated; ``front_db``/``rec_db`` leaves
+    carry a leading length-1 shard-block dim.  The front's candidate
+    generation comes from its registered ``ShardedFrontHooks.body``
+    (``qvalid`` masks padded query rows out of candidates and counters on
+    every shard identically); refine, rerank and the cross-shard merge
+    are front-agnostic.
     """
     front_local = jax.tree.map(lambda a: a[0], front_db)
     pq_codes, levels, scalars, x, gid = jax.tree.map(
@@ -488,7 +497,7 @@ def _shard_body(queries, front_rep, codebook, model, front_db, rec_db, *,
 
     # -- front: the registered per-shard body (may use mesh collectives) --
     cand = registry.sharded_front(front).body(
-        queries, front_rep, front_local, codebook, pq_codes,
+        queries, front_rep, front_local, codebook, pq_codes, qvalid=qvalid,
         **dict(front_args))
 
     # -- refine: registered backends, thresholds pooled across the axis ---
@@ -516,16 +525,18 @@ def _shard_body(queries, front_rep, codebook, model, front_db, rec_db, *,
 
 @partial(jax.jit, static_argnames=("mesh", "dim", "k", "budget", "bound",
                                    "z", "backend", "front", "front_args"))
-def _sharded_search(mesh, queries, front_rep, codebook, trq_model, front_db,
-                    rec_db, *, dim: int, k: int, budget: int, bound: str,
-                    z: float, backend: str, front: str, front_args: tuple):
+def _sharded_search(mesh, queries, qvalid, front_rep, codebook, trq_model,
+                    front_db, rec_db, *, dim: int, k: int, budget: int,
+                    bound: str, z: float, backend: str, front: str,
+                    front_args: tuple):
     body = partial(_shard_body, dim=dim, k=k, budget=budget, bound=bound,
                    z=z, backend=backend, front=front, front_args=front_args)
     fn = shard_map(body, mesh=mesh,
-                   in_specs=(P(), P(), P(), P(), P(AXIS), P(AXIS)),
+                   in_specs=(P(), P(), P(), P(), P(), P(AXIS), P(AXIS)),
                    out_specs=(P(), P(), P(AXIS)),
                    check_rep=False)
-    return fn(queries, front_rep, codebook, trq_model, front_db, rec_db)
+    return fn(queries, qvalid, front_rep, codebook, trq_model, front_db,
+              rec_db)
 
 
 # ---------------------------------------------------------------- executor
@@ -569,10 +580,12 @@ class ShardedExecutor:
     # -- search -----------------------------------------------------------
 
     def execute(self, queries: jax.Array, *, k: int | None = None,
-                cost: QueryCost | None = None
+                cost: QueryCost | None = None, pad: bool = False
                 ) -> tuple[jax.Array, jax.Array, QueryCost]:
         """Sharded FaTRQ search: (Q, k) GLOBAL ids, (Q, k) exact squared-L2
-        distances, and the merged per-shard ledger."""
+        distances, and the merged per-shard ledger.  ``pad=True`` pads
+        ragged chunks to their power-of-two bucket (replicated validity
+        mask), exactly like ``SearchExecutor.execute``."""
         si = self.sharded
         cfg = si.config
         k = k or cfg.final_k
@@ -583,11 +596,20 @@ class ShardedExecutor:
         dist_parts: list[jax.Array] = []
         counters: Counters = {}
         for chunk in iter_chunks(queries, self.micro_batch):
+            n = chunk.shape[0]
+            if pad:
+                chunk, qvalid = pad_chunk(
+                    chunk, bucket_for(n, self.micro_batch))
+            else:
+                qvalid = jnp.ones((n,), bool)
             topk, topk_d, cnt = _sharded_search(
-                si.mesh, chunk, si.front_rep, si.codebook, si.trq.model,
-                si.front_db, rec_db, dim=si.trq.dim, k=k, budget=budget,
-                bound=cfg.bound, z=cfg.z, backend=self.backend,
-                front=si.front, front_args=si.front_args)
+                si.mesh, chunk, qvalid, si.front_rep, si.codebook,
+                si.trq.model, si.front_db, rec_db, dim=si.trq.dim, k=k,
+                budget=budget, bound=cfg.bound, z=cfg.z,
+                backend=self.backend, front=si.front,
+                front_args=si.front_args)
+            if topk.shape[0] != n:             # drop padded rows
+                topk, topk_d = topk[:n], topk_d[:n]
             topk_parts.append(topk)
             dist_parts.append(topk_d)
             _accumulate(counters, cnt)

@@ -79,11 +79,20 @@ class Refined(NamedTuple):
 
 @runtime_checkable
 class FrontStage(Protocol):
-    """Candidate generation: batched queries in, Candidates out."""
+    """Candidate generation: batched queries in, Candidates out.
+
+    ``qvalid`` is an optional per-query validity mask (Q,) used by the
+    bucket-padded entry points (``executor.pad_chunk``): padded query rows
+    must contribute NOTHING to the candidate set or the device-side
+    counters, so batched ledgers stay bit-identical to the sum of the
+    real queries' unpadded ledgers.  ``None`` means all queries are real
+    (the legacy trace).
+    """
 
     name: str
 
-    def candidates(self, queries: jax.Array) -> Candidates: ...
+    def candidates(self, queries: jax.Array,
+                   qvalid: jax.Array | None = None) -> Candidates: ...
 
     def fold_cost(self, cost: QueryCost, counts: dict[str, int],
                   layout: RecordLayout) -> None: ...
@@ -148,12 +157,14 @@ def adc_score(codebook: pq_mod.PQCodebook, codes: jax.Array,
 
 
 @partial(jax.jit, static_argnames=("nprobe",))
-def _ivf_candidates(ivf: ivf_mod.IVFIndex, codebook, pq_codes, queries, *,
-                    nprobe: int):
+def _ivf_candidates(ivf: ivf_mod.IVFIndex, codebook, pq_codes, queries,
+                    qvalid, *, nprobe: int):
     _, top_lists = rank_centroid_lists(ivf.centroids, queries,
                                        nprobe=nprobe)
     ids = ivf.lists[top_lists].reshape(queries.shape[0], -1)  # (Q, nprobe·cap)
     valid = ids >= 0
+    if qvalid is not None:                 # padded rows: no candidates
+        valid = valid & qvalid[:, None]
     safe = jnp.maximum(ids, 0)
     d0 = adc_score(codebook, pq_codes[safe], queries, valid)
     return safe, valid, d0, jnp.sum(valid)
@@ -169,9 +180,10 @@ class IVFFrontStage:
     nprobe: int = 8
     name: str = field(default="ivf", init=False)
 
-    def candidates(self, queries: jax.Array) -> Candidates:
+    def candidates(self, queries: jax.Array,
+                   qvalid: jax.Array | None = None) -> Candidates:
         safe, valid, d0, n_cand = _ivf_candidates(
-            self.ivf, self.codebook, self.pq_codes, queries,
+            self.ivf, self.codebook, self.pq_codes, queries, qvalid,
             nprobe=self.nprobe)
         return Candidates(ids=safe, valid=valid, d0=d0,
                           counters={"front_cand": n_cand})
@@ -182,17 +194,18 @@ class IVFFrontStage:
 
 
 @partial(jax.jit, static_argnames=("iters", "beam", "expand"))
-def _graph_candidates(neighbors, x_score, codebook, pq_codes, queries, *,
-                      iters: int, beam: int, expand: int):
+def _graph_candidates(neighbors, x_score, codebook, pq_codes, queries,
+                      qvalid, *, iters: int, beam: int, expand: int):
     gidx = graph_mod.GraphIndex(neighbors=neighbors)
     ids = jax.vmap(lambda q: graph_mod.search(gidx, x_score, q, iters=iters,
                                               beam=beam, expand=expand))(
         queries)                                              # (Q, beam)
-    valid = jnp.ones(ids.shape, bool)
+    valid = jnp.ones(ids.shape, bool) if qvalid is None \
+        else jnp.broadcast_to(qvalid[:, None], ids.shape)
     tables = jax.vmap(lambda q: pq_mod.adc_table(codebook, q))(queries)
     d0 = jax.vmap(pq_mod.adc_distances)(tables, pq_codes[ids])
-    nq = queries.shape[0]
-    return ids, valid, d0, jnp.asarray(nq * beam, jnp.int32)
+    d0 = jnp.where(valid, d0, jnp.inf)
+    return ids, valid, d0, jnp.sum(valid)
 
 
 def fold_graph_front_cost(cost: QueryCost, counts: dict[str, int],
@@ -228,16 +241,19 @@ class GraphFrontStage:
     def __post_init__(self):
         self.x_score = pq_mod.decode(self.codebook, self.pq_codes)
 
-    def candidates(self, queries: jax.Array) -> Candidates:
+    def candidates(self, queries: jax.Array,
+                   qvalid: jax.Array | None = None) -> Candidates:
         ids, valid, d0, n_cand = _graph_candidates(
             self.graph.neighbors, self.x_score, self.codebook, self.pq_codes,
-            queries, iters=self.iters, beam=self.beam, expand=self.expand)
-        nq = queries.shape[0]
-        hops = jnp.asarray(nq * self.iters * self.expand * self.graph.degree,
-                           jnp.int32)
+            queries, qvalid, iters=self.iters, beam=self.beam,
+            expand=self.expand)
+        # traversal work is uniform per query, so padded rows just scale out
+        per_q = self.iters * self.expand * self.graph.degree
+        nq = jnp.asarray(queries.shape[0], jnp.int32) if qvalid is None \
+            else jnp.sum(qvalid).astype(jnp.int32)
         return Candidates(ids=ids, valid=valid, d0=d0,
                           counters={"front_cand": n_cand,
-                                    "front_hops": hops})
+                                    "front_hops": nq * per_q})
 
     def fold_cost(self, cost: QueryCost, counts: dict[str, int],
                   layout: RecordLayout) -> None:

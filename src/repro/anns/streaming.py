@@ -110,7 +110,8 @@ def _pad_rows(a: jax.Array, cap: int) -> jax.Array:
 
 @partial(jax.jit, static_argnames=("nprobe",))
 def _streaming_candidates(centroids, codebook, pq_codes, base_lists,
-                          delta_lists, alive, queries, *, nprobe: int):
+                          delta_lists, alive, queries, qvalid, *,
+                          nprobe: int):
     """Generation-aware IVF front: probe base ∪ delta lists of the global
     top-``nprobe`` centroids, mask tombstones, ADC-score, and count delta
     candidates separately for the ledger."""
@@ -121,6 +122,8 @@ def _streaming_candidates(centroids, codebook, pq_codes, base_lists,
     ids = jnp.concatenate([ids_b, ids_d], axis=1)             # (Q, C)
     safe = jnp.maximum(ids, 0)
     valid = (ids >= 0) & alive[safe]                          # tombstone mask
+    if qvalid is not None:                 # padded rows: no candidates
+        valid = valid & qvalid[:, None]
     d0 = adc_score(codebook, pq_codes[safe], queries, valid)
     is_delta = jnp.broadcast_to(
         jnp.arange(ids.shape[1])[None, :] >= ids_b.shape[1], ids.shape)
@@ -145,10 +148,12 @@ class StreamingFrontStage:
     nprobe: int = 8
     name: str = "streaming"
 
-    def candidates(self, queries: jax.Array) -> Candidates:
+    def candidates(self, queries: jax.Array,
+                   qvalid: jax.Array | None = None) -> Candidates:
         safe, valid, d0, is_delta, n_cand, n_delta = _streaming_candidates(
             self.centroids, self.codebook, self.pq_codes, self.base_lists,
-            self.delta_lists, self.alive, queries, nprobe=self.nprobe)
+            self.delta_lists, self.alive, queries, qvalid,
+            nprobe=self.nprobe)
         return Candidates(ids=safe, valid=valid, d0=d0,
                           counters={"front_cand": n_cand,
                                     "delta_cand": n_delta},
@@ -161,8 +166,8 @@ class StreamingFrontStage:
 
 @partial(jax.jit, static_argnames=("iters", "beam", "expand", "n_base"))
 def _graph_streaming_candidates(neighbors, x_score, codebook, pq_codes,
-                                alive, queries, *, iters: int, beam: int,
-                                expand: int, n_base: int):
+                                alive, queries, qvalid, *, iters: int,
+                                beam: int, expand: int, n_base: int):
     """Tombstone-aware graph front: beam-search the maintained adjacency
     (which still routes THROUGH dead rows), mask tombstones out of the
     final beam, and count post-compaction rows as delta candidates."""
@@ -171,6 +176,8 @@ def _graph_streaming_candidates(neighbors, x_score, codebook, pq_codes,
                                               beam=beam, expand=expand))(
         queries)                                              # (Q, beam)
     valid = alive[ids]
+    if qvalid is not None:                 # padded rows: no candidates
+        valid = valid & qvalid[:, None]
     d0 = adc_score(codebook, pq_codes[ids], queries, valid)
     is_delta = ids >= n_base
     return (ids, valid, d0, is_delta, jnp.sum(valid),
@@ -201,18 +208,20 @@ class GraphStreamingFrontStage:
         if self.x_score is None:
             self.x_score = pq_mod.decode(self.codebook, self.pq_codes)
 
-    def candidates(self, queries: jax.Array) -> Candidates:
+    def candidates(self, queries: jax.Array,
+                   qvalid: jax.Array | None = None) -> Candidates:
         ids, valid, d0, is_delta, n_cand, n_delta = \
             _graph_streaming_candidates(
                 self.graph.neighbors, self.x_score, self.codebook,
-                self.pq_codes, self.alive, queries, iters=self.iters,
-                beam=self.beam, expand=self.expand, n_base=self.n_base)
-        nq = queries.shape[0]
-        hops = jnp.asarray(nq * self.iters * self.expand * self.graph.degree,
-                           jnp.int32)
+                self.pq_codes, self.alive, queries, qvalid,
+                iters=self.iters, beam=self.beam, expand=self.expand,
+                n_base=self.n_base)
+        per_q = self.iters * self.expand * self.graph.degree
+        nq = jnp.asarray(queries.shape[0], jnp.int32) if qvalid is None \
+            else jnp.sum(qvalid).astype(jnp.int32)
         return Candidates(ids=ids, valid=valid, d0=d0,
                           counters={"front_cand": n_cand,
-                                    "front_hops": hops,
+                                    "front_hops": nq * per_q,
                                     "delta_cand": n_delta},
                           is_delta=is_delta)
 
@@ -280,6 +289,7 @@ class StreamingIndex:
         self._dev_cache: dict | None = None
         self._snap_cache: tuple[int, FaTRQIndex, np.ndarray] | None = None
         self._ex_cache: dict = {}
+        self._gen_hooks: list = []
 
     # ------------------------------------------------------------ stats
 
@@ -348,10 +358,21 @@ class StreamingIndex:
 
     # ---------------------------------------------------------- mutation
 
+    def add_generation_hook(self, fn) -> None:
+        """Register ``fn(index, generation)`` to fire after EVERY mutation
+        that bumps the generation (``insert``/``delete``/``compact``/
+        ``rebalance``).  Observers that key state on the generation — the
+        serving layer's query-result cache (``serving.cache.ResultCache``)
+        is the canonical one — use this to invalidate proactively instead
+        of holding stale entries until their keys age out."""
+        self._gen_hooks.append(fn)
+
     def _invalidate(self) -> None:
         self.generation += 1
         self._dev_cache = None
         self._snap_cache = None
+        for fn in list(self._gen_hooks):
+            fn(self, self.generation)
 
     def _grow_rows(self, need: int) -> None:
         new_cap = max(need, 2 * self.cap_rows)

@@ -60,10 +60,10 @@ def main():
 
         prompts = jax.random.randint(jax.random.PRNGKey(4),
                                      (args.batch, 8), 0, cfg.vocab)
-        gen, ids, cost = rag_answer(engine, index, embed_fn, prompts)
-        print(f"RAG: retrieved {ids.shape[1]} docs/request; "
-              f"retrieval {cost.total_seconds() / args.batch * 1e6:.0f}"
-              f"us/query (modeled)")
+        res = rag_answer(engine, index, embed_fn, prompts)
+        print(f"RAG: retrieved {res.ids.shape[1]} docs/request; "
+              f"retrieval {res.cost.total_seconds() / args.batch * 1e6:.0f}"
+              f"us/query (modeled); degraded={res.degraded}")
 
 
 if __name__ == "__main__":

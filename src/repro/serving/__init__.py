@@ -1,6 +1,13 @@
-from repro.serving.engine import Engine, Retriever, rag_answer
+from repro.serving.cache import CacheStats, ResultCache, query_key
+from repro.serving.engine import Engine, RagResult, Retriever, rag_answer
+from repro.serving.scheduler import (Request, Response, ServingEngine,
+                                     ServingStats, TenantQoS, TokenBucket,
+                                     VirtualClock)
 
-__all__ = ["Engine", "Retriever", "rag_answer"]
+__all__ = ["Engine", "RagResult", "Retriever", "rag_answer",
+           "Request", "Response", "ServingEngine", "ServingStats",
+           "TenantQoS", "TokenBucket", "VirtualClock",
+           "CacheStats", "ResultCache", "query_key"]
 
 # re-exported for serving callers building plans (canonical home: repro.anns)
 from repro.anns.api import Database, QueryPlan, SearchResult  # noqa: E402,F401

@@ -1,0 +1,153 @@
+"""Query-result cache for the serving engine (see ``serving.scheduler``).
+
+Serving workloads repeat themselves: RAG frontends re-issue the same
+question verbatim, dashboards poll fixed probes, and popular queries
+dominate open-loop traces.  Re-running the full front → refine → rerank
+datapath for an exact repeat buys nothing — the index is deterministic, so
+the same query under the same plan against the same index state returns
+bit-identical ids and distances.  The cache short-circuits those repeats
+at *admission* time, before the request ever reaches the coalescer.
+
+Keying.  An entry is keyed on the triple
+
+  ``(query_key(q), resolved QueryPlan, index generation)``
+
+* ``query_key`` quantizes the query through the SAME level-0 ternary
+  residual encoder the index uses for vectors (``core.ternary`` →
+  ``core.packing``) and hashes the packed bytes + the f32 scale pair
+  (norm, rho).  Two float queries that quantize identically ARE the same
+  query as far as a match-on-bytes cache is concerned; conversely any
+  bit difference in the packed code misses.  Packing cuts the key to
+  ~D/4 bytes, and the encode is a single jitted call per request.
+* The *resolved* plan participates so a degraded-QoS request (lower
+  ``refine_budget``, see ``scheduler.TokenBucket``) never serves a
+  full-service entry or vice versa — results are bit-identical only
+  under the plan that produced them.
+* The index ``generation`` participates so a mutation epoch can never
+  serve stale results (below).
+
+Invalidation.  ``attach(index)`` registers ``_on_mutation`` as a
+generation hook on a ``StreamingIndex`` (``add_generation_hook``): every
+``insert``/``delete``/``compact``/``rebalance`` bumps the generation and
+the hook proactively purges all entries stamped with older generations.
+Static/sharded indexes never mutate, so attach is a no-op for them — the
+generation in the key (always 0) still guards correctness if a caller
+swaps index objects.
+
+Eviction is plain LRU over an ``OrderedDict``; hits refresh recency.
+All counters live in ``CacheStats`` so benchmarks and tests can assert
+hit/miss/invalidation accounting exactly.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.packing import pack_ternary
+from repro.core.ternary import ternary_encode
+
+
+@partial(jax.jit)
+def _quantize(q: jax.Array):
+    """Level-0 ternary encode + bit-pack of one query vector ``(D,)``."""
+    tc = ternary_encode(q)
+    return pack_ternary(tc.code), tc.norm, tc.rho
+
+
+def query_key(q) -> bytes:
+    """Stable byte key for one query vector: packed level-0 ternary code
+    plus the (norm, rho) scale pair as f32 little-endian bytes."""
+    packed, norm, rho = _quantize(jnp.asarray(q, jnp.float32))
+    return (np.asarray(packed).tobytes()
+            + np.float32(norm).tobytes()
+            + np.float32(rho).tobytes())
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    evictions: int = 0
+    invalidations: int = 0
+
+    def as_dict(self) -> dict:
+        return {"hits": self.hits, "misses": self.misses,
+                "inserts": self.inserts, "evictions": self.evictions,
+                "invalidations": self.invalidations}
+
+
+@dataclass(frozen=True)
+class CacheEntry:
+    """Cached per-query result: ids and exact distances as host numpy
+    copies (detached from any device buffer), plus the QoS class the
+    producing batch ran under."""
+
+    ids: np.ndarray
+    distances: np.ndarray
+    degraded: bool
+
+
+@dataclass
+class ResultCache:
+    """LRU result cache keyed on (query bytes, plan, index generation).
+
+    ``hit_latency_us`` is the virtual-clock service time charged to a
+    cache hit by the scheduler — hits skip the device datapath entirely,
+    so their latency is a (tiny) fixed lookup cost, not a tier ledger.
+    """
+
+    capacity: int = 1024
+    hit_latency_us: float = 1.0
+    stats: CacheStats = field(default_factory=CacheStats)
+    _entries: OrderedDict = field(default_factory=OrderedDict)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, qkey: bytes, plan, generation: int) -> CacheEntry | None:
+        key = (qkey, plan, generation)
+        entry = self._entries.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return entry
+
+    def insert(self, qkey: bytes, plan, generation: int, ids, distances,
+               *, degraded: bool = False) -> None:
+        key = (qkey, plan, generation)
+        if key in self._entries:
+            self._entries.move_to_end(key)
+            return
+        while len(self._entries) >= self.capacity:
+            self._entries.popitem(last=False)
+            self.stats.evictions += 1
+        self._entries[key] = CacheEntry(
+            ids=np.array(ids), distances=np.array(distances),
+            degraded=degraded)
+        self.stats.inserts += 1
+
+    def attach(self, index) -> None:
+        """Subscribe to ``index`` mutations when it publishes a generation
+        hook (``StreamingIndex``); immutable layouts need no hook."""
+        hook = getattr(index, "add_generation_hook", None)
+        if hook is not None:
+            hook(self._on_mutation)
+
+    def _on_mutation(self, index, generation: int) -> None:
+        """Mutation fired: purge every entry from an older generation."""
+        stale = [k for k in self._entries if k[2] != generation]
+        for k in stale:
+            del self._entries[k]
+        self.stats.invalidations += len(stale)
+
+    def clear(self) -> None:
+        self._entries.clear()

@@ -14,9 +14,11 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.anns.api import Database, QueryPlan, SearchResult
 from repro.anns.pipeline import FaTRQIndex
@@ -96,6 +98,7 @@ class Retriever:
     micro_batch: int | None = 8
     shards: int | None = None
     plan: QueryPlan | None = None
+    bucket: bool = True
     total_cost: QueryCost = field(default_factory=QueryCost)
 
     @property
@@ -119,17 +122,37 @@ class Retriever:
     def query(self, queries: jax.Array, *, k: int,
               micro_batch: int | None = None) -> SearchResult:
         """Planned retrieval → ``SearchResult`` (ids, exact distances,
-        ledger, resolved plan); folds the call into ``total_cost``."""
+        ledger, resolved plan); folds the call into ``total_cost``.
+
+        With ``bucket=True`` (the default) ragged trailing chunks pad to
+        the smallest compiled power-of-two bucket ≤ the micro-batch and
+        mask the padding with ``qvalid`` — so serving a stream of varying
+        batch sizes reuses the handful of bucket traces instead of
+        compiling one per distinct remainder (padded rows contribute
+        neither candidates nor ledger traffic; results are bit-identical
+        to the unpadded path)."""
         res = self.db.query(queries, plan=self.default_plan(), k=k,
-                            micro_batch=micro_batch)
+                            micro_batch=micro_batch, bucket=self.bucket)
         self.total_cost.merge(res.cost)
         return res
+
+
+class RagResult(NamedTuple):
+    """The full RAG round-trip output: generated tokens, retrieved ids,
+    the retrieval traffic ledger, and whether QoS throttling degraded any
+    of the batch's retrievals (always False outside a ``ServingEngine``)."""
+
+    tokens: jax.Array     # (B, decode_steps) greedy continuations
+    ids: jax.Array        # (B, k) retrieved context ids
+    cost: QueryCost       # retrieval ledger for this call
+    degraded: bool        # any retrieval ran under a degraded QoS plan
 
 
 def rag_answer(engine: Engine, index: FaTRQIndex, embed_fn, prompt_tokens,
                *, k: int = 5, decode_steps: int = 8,
                retriever: Retriever | None = None, micro_batch: int = 8,
-               plan: QueryPlan | None = None):
+               plan: QueryPlan | None = None,
+               serving=None) -> RagResult:
     """One RAG round-trip: embed the prompt, FaTRQ-retrieve top-k context
     ids through the planned ``Database`` datapath (micro-batched), prepend
     them (stub tokenization: ids mod vocab), decode.
@@ -138,21 +161,44 @@ def rag_answer(engine: Engine, index: FaTRQIndex, embed_fn, prompt_tokens,
     refine budget, ...) into the default retriever — previously a default
     ``Retriever`` was constructed that silently ignored any such
     configuration.  Pass ``retriever`` instead to keep a running ledger
-    across calls (mutually exclusive with ``plan``; configure the
-    retriever's plan at construction)."""
+    across calls, or ``serving`` (a ``serving.scheduler.ServingEngine``)
+    to route retrieval through the continuous-batching scheduler — QoS
+    degradation and cache hits then surface in the returned ``RagResult``
+    (``degraded`` flag; cache hits contribute no ledger traffic).  The
+    three are mutually exclusive.
+
+    Returns a ``RagResult`` named tuple — the retrieval ``QueryCost`` and
+    the ``degraded`` flag ride along with tokens and ids, so callers
+    (e.g. ``launch.serve``) can bill retrieval traffic per request
+    without reaching into retriever internals."""
     q = embed_fn(prompt_tokens)                       # (B, D) embeddings
-    if retriever is None:
-        if plan is not None and plan.micro_batch is None:
-            plan = dataclasses.replace(plan, micro_batch=micro_batch)
-        retriever = Retriever(index=index, micro_batch=micro_batch,
-                              plan=plan)
-    elif plan is not None:
-        raise ValueError("pass plan= or retriever=, not both — a "
-                         "Retriever carries its own plan")
-    ids, cost = retriever.retrieve(q, k=k)
+    if serving is not None:
+        if retriever is not None or plan is not None:
+            raise ValueError("pass serving= alone — a ServingEngine "
+                             "carries its own plan and QoS config")
+        resp = serving.serve(q, k=k)
+        ids = jnp.asarray(np.stack([r.ids for r in resp]))
+        cost = QueryCost()
+        seen_batches = set()
+        for r in resp:
+            if r.cost is not None and r.batch not in seen_batches:
+                seen_batches.add(r.batch)
+                cost.merge(r.cost)
+        degraded = any(r.degraded for r in resp)
+    else:
+        if retriever is None:
+            if plan is not None and plan.micro_batch is None:
+                plan = dataclasses.replace(plan, micro_batch=micro_batch)
+            retriever = Retriever(index=index, micro_batch=micro_batch,
+                                  plan=plan)
+        elif plan is not None:
+            raise ValueError("pass plan= or retriever=, not both — a "
+                             "Retriever carries its own plan")
+        ids, cost = retriever.retrieve(q, k=k)
+        degraded = False
     engine.stats.retrievals += q.shape[0]
     # stub contextualization: retrieved ids become context tokens
     ctx = (ids % engine.api.cfg.vocab).astype(jnp.int32)
     seed = jnp.concatenate([ctx, prompt_tokens], axis=1)[:, -1:]
     gen = engine.decode(seed, decode_steps)
-    return gen, ids, cost
+    return RagResult(tokens=gen, ids=ids, cost=cost, degraded=degraded)

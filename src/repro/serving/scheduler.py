@@ -1,0 +1,477 @@
+"""Continuous-batching serving engine over ``anns.api.Database``.
+
+The query layer (PR 5-7) answers *one batch at a time*: callers hand
+``db.query`` a query stack and block until the staged executor finishes.
+A serving frontend sees a different shape of work — an open-loop stream
+of single-query requests with deadlines and tenants — and pays for the
+mismatch twice: per-request dispatch recompiles nothing but still runs
+the datapath at batch size 1 (device utilization ∝ batch size), and a
+hot tenant can starve everyone else out of the refine budget.
+
+``ServingEngine`` closes the gap with four cooperating pieces:
+
+* **Admission scheduler** — requests enter a deadline-ordered (EDF)
+  admission queue under a deterministic virtual clock (microseconds).
+  The engine is a discrete-event simulator over that clock: identical
+  (seed, arrival trace) inputs produce identical batch boundaries,
+  which is what makes the scheduler testable at all.
+* **Coalescer** — admitted requests group by service class
+  ``(k, degraded)``; a class's micro-batch closes when it reaches
+  ``max_batch`` or its oldest member has waited ``max_wait_us``.
+  Batches pad to the compiled power-of-two buckets
+  (``executor.bucket_for`` / ``pad_chunk``), so the plan-keyed executor
+  cache is reused across every batch size — the engine never triggers
+  a recompile at dispatch time.
+* **Double-buffered dispatch** — on layouts with a front/refine split
+  (``CompiledPlan.supports_split``), batch N+1's candidate-generation
+  stage (``run_front``) is enqueued *before* batch N's refine + rerank
+  (``run_finish``) is retired, overlapping the HBM-resident front with
+  the CXL/SSD-bound refine exactly as the paper's pipeline does for
+  levels.  The virtual-clock model mirrors that: a front unit and a
+  refine unit with independent free times, each batch's stage times
+  taken from its own ledger (front = HBM tier seconds, refine = the
+  rest).  The fused sharded body has no split point; it dispatches
+  whole batches on a single serial unit.
+* **Per-tenant QoS** — each tenant owns a token bucket
+  (``rate_rps``/``burst``).  A request arriving to an empty bucket is
+  *degraded, not rejected*: it runs under a reduced
+  ``QueryPlan.refine_budget`` (÷ ``degrade_factor``, floored at k) and
+  its response carries ``degraded=True``.  Throttling trades recall
+  for admission — the starved tenant still progresses.
+* **Result cache** (``serving.cache.ResultCache``) — admission first
+  probes the cache under the exact class plan the request would run
+  with; hits bypass the coalescer entirely and are charged a fixed
+  ``hit_latency_us``.  Entries key on (quantized query bytes, resolved
+  plan, index generation) and are purged by ``StreamingIndex``
+  mutations via the generation hook.
+
+Bit-identity: batches are formed only within a service class, padded
+rows are masked out of candidates and counters by ``qvalid``, and the
+datapath is per-query deterministic — so every response's ids,
+distances, and the summed ledger are bit-identical to sequential
+``db.query`` calls with the same per-request plans (pinned in
+``tests/test_serving.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns.api import Database, QueryPlan
+from repro.anns.executor import bucket_for, pad_chunk
+from repro.memory.tiers import QueryCost, Tier
+from repro.serving.cache import ResultCache, query_key
+
+__all__ = ["Request", "Response", "TenantQoS", "TokenBucket",
+           "VirtualClock", "ServingEngine", "ServingStats"]
+
+
+@dataclass(frozen=True)
+class Request:
+    """One serving request: a single query vector plus scheduling
+    metadata.  ``rid`` is assigned by the engine (monotonic, arrival
+    order) when left ``None``."""
+
+    query: object                      # (D,) float vector
+    tenant: str = "default"
+    k: int | None = None               # None → plan/config final_k
+    arrival_us: float = 0.0
+    deadline_us: float = math.inf
+    rid: int | None = None
+
+
+@dataclass
+class Response:
+    """One completed request.  ``cost`` is the ledger of the *batch* the
+    request rode in (shared object across its co-batched peers; None for
+    cache hits, which never touch the datapath)."""
+
+    rid: int
+    tenant: str
+    ids: np.ndarray
+    distances: np.ndarray
+    degraded: bool
+    cache_hit: bool
+    arrival_us: float
+    admit_us: float
+    done_us: float
+    batch: int | None
+    cost: QueryCost | None
+
+    @property
+    def latency_us(self) -> float:
+        return self.done_us - self.arrival_us
+
+
+@dataclass
+class VirtualClock:
+    """Deterministic microsecond clock; only ever advances."""
+
+    now_us: float = 0.0
+
+    def advance_to(self, t_us: float) -> None:
+        self.now_us = max(self.now_us, t_us)
+
+
+@dataclass
+class TokenBucket:
+    """Standard token bucket in request units, refilled on observation."""
+
+    rate_per_s: float
+    burst: float
+    tokens: float = 0.0
+    last_us: float = 0.0
+
+    def __post_init__(self):
+        self.tokens = self.burst
+
+    def _refill(self, now_us: float) -> None:
+        if now_us > self.last_us:
+            self.tokens = min(
+                self.burst,
+                self.tokens + (now_us - self.last_us) * self.rate_per_s / 1e6)
+            self.last_us = now_us
+
+    def peek(self, now_us: float) -> bool:
+        """True when a full-service token is available (does not consume)."""
+        self._refill(now_us)
+        return self.tokens >= 1.0
+
+    def take(self, now_us: float) -> None:
+        self._refill(now_us)
+        self.tokens -= 1.0
+
+
+@dataclass(frozen=True)
+class TenantQoS:
+    """Per-tenant service contract: sustained full-service rate and burst
+    allowance.  ``rate_rps=None`` means unthrottled (never degraded)."""
+
+    rate_rps: float | None = None
+    burst: float = 8.0
+
+
+@dataclass
+class ServingStats:
+    requests: int = 0
+    batches: int = 0
+    cache_hits: int = 0
+    degraded: int = 0
+    padded_slots: int = 0
+
+    def as_dict(self) -> dict:
+        return {"requests": self.requests, "batches": self.batches,
+                "cache_hits": self.cache_hits, "degraded": self.degraded,
+                "padded_slots": self.padded_slots}
+
+
+@dataclass
+class _Admitted:
+    """A request past admission, waiting in its class queue."""
+
+    deadline_us: float
+    arrival_us: float
+    rid: int
+    req: Request
+    admit_us: float
+    qkey: bytes | None
+    degraded: bool
+
+
+@dataclass
+class _Inflight:
+    """A batch whose front stage has been dispatched but whose refine has
+    not been retired yet (double buffering holds at most one)."""
+
+    bid: int
+    batch: list
+    cp: object
+    qpad: object
+    cand: object
+    n: int
+    dispatch_us: float
+    degraded: bool
+
+
+class ServingEngine:
+    """Continuous-batching request scheduler over one ``Database``.
+
+    Parameters
+    ----------
+    index : FaTRQIndex | ShardedIndex | StreamingIndex | Database
+    plan : QueryPlan | None — base plan; ``micro_batch`` is forced to
+        ``max_batch`` so coalesced batches are single executor chunks.
+    max_batch : coalescer close size (and compiled micro-batch).
+    max_wait_us : coalescer close age for a non-full batch.
+    qos : dict[str, TenantQoS] — per-tenant contracts; missing tenants
+        fall back to ``default_qos`` (None = unthrottled).
+    degrade_factor : refine-budget divisor for throttled requests.
+    cache : ResultCache | None — attach a result cache.
+    batching : False degenerates to one-request batches (the baseline
+        the benchmark compares against).
+    overlap : False disables double buffering (serial timing model).
+    dispatch_overhead_us : fixed host cost charged per dispatched batch
+        in the virtual timing model — the submit + sync round trip the
+        tier ledger (pure memory traffic) cannot see.  This is the cost
+        coalescing amortizes: one-request batches pay it per query.
+    """
+
+    def __init__(self, index, *, plan: QueryPlan | None = None,
+                 max_batch: int = 8, max_wait_us: float = 200.0,
+                 qos: dict | None = None,
+                 default_qos: TenantQoS | None = None,
+                 degrade_factor: int = 4,
+                 cache: ResultCache | None = None,
+                 batching: bool = True, overlap: bool = True,
+                 dispatch_overhead_us: float = 50.0,
+                 mesh=None):
+        self.db = index if isinstance(index, Database) else Database.wrap(index)
+        if not batching:
+            max_batch, max_wait_us = 1, 0.0
+        self.max_batch = int(max_batch)
+        self.max_wait_us = float(max_wait_us)
+        base = plan or QueryPlan()
+        base = dataclasses.replace(base, micro_batch=self.max_batch)
+        self.base_plan = self.db.validate(base)
+        self.qos = dict(qos or {})
+        self.default_qos = default_qos
+        self.degrade_factor = int(degrade_factor)
+        self.cache = cache
+        self.overlap = bool(overlap)
+        self.dispatch_overhead_us = float(dispatch_overhead_us)
+        self.mesh = mesh
+        if cache is not None:
+            cache.attach(self.db.index)
+
+        self.clock = VirtualClock()
+        self.stats = ServingStats()
+        self.total_cost = QueryCost()
+        self.batch_log: list[tuple] = []   # (bid, dispatch_us, rids)
+        self._buckets: dict[str, TokenBucket] = {}
+        self._queues: dict[tuple, list] = {}    # (k, degraded) -> [_Admitted]
+        self._plan_cache: dict[tuple, QueryPlan] = {}
+        self._inflight: _Inflight | None = None
+        self._next_rid = 0
+        # virtual pipeline units (see module docstring)
+        self._front_free_us = 0.0
+        self._refine_free_us = 0.0
+        self._busy_free_us = 0.0
+
+    # -- QoS ---------------------------------------------------------------
+
+    def _bucket(self, tenant: str) -> TokenBucket | None:
+        contract = self.qos.get(tenant, self.default_qos)
+        if contract is None or contract.rate_rps is None:
+            return None
+        bucket = self._buckets.get(tenant)
+        if bucket is None:
+            bucket = TokenBucket(rate_per_s=contract.rate_rps,
+                                 burst=contract.burst,
+                                 last_us=self.clock.now_us)
+            self._buckets[tenant] = bucket
+        return bucket
+
+    def _class_plan(self, k: int, degraded: bool) -> QueryPlan:
+        """The resolved plan a (k, degraded) service class runs under.
+        Degraded classes trade refine depth (÷ degrade_factor, floored at
+        k so the rerank stage stays well-formed) for admission."""
+        key = (k, degraded)
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            rb = self.base_plan.refine_budget
+            if degraded:
+                rb = max(k, rb // self.degrade_factor)
+            plan = self.db.validate(dataclasses.replace(
+                self.base_plan, k=k, refine_budget=rb))
+            self._plan_cache[key] = plan
+        return plan
+
+    # -- admission ---------------------------------------------------------
+
+    def _admit(self, req: Request, responses: list) -> None:
+        now = self.clock.now_us
+        self.stats.requests += 1
+        rk = req.k or self.base_plan.k
+        bucket = self._bucket(req.tenant)
+        degraded = bucket is not None and not bucket.peek(now)
+        plan = self._class_plan(rk, degraded)
+        qkey = None
+        if self.cache is not None:
+            qkey = query_key(req.query)
+            entry = self.cache.lookup(qkey, plan, self.db.generation)
+            if entry is not None:
+                self.stats.cache_hits += 1
+                if degraded:
+                    self.stats.degraded += 1
+                responses.append(Response(
+                    rid=req.rid, tenant=req.tenant,
+                    ids=entry.ids.copy(), distances=entry.distances.copy(),
+                    degraded=degraded, cache_hit=True,
+                    arrival_us=req.arrival_us, admit_us=now,
+                    done_us=now + self.cache.hit_latency_us,
+                    batch=None, cost=None))
+                return
+        if degraded:
+            self.stats.degraded += 1
+        elif bucket is not None:
+            bucket.take(now)    # full service consumes; misses only
+        self._queues.setdefault((rk, degraded), []).append(_Admitted(
+            deadline_us=req.deadline_us, arrival_us=req.arrival_us,
+            rid=req.rid, req=req, admit_us=now, qkey=qkey,
+            degraded=degraded))
+
+    # -- coalescing + dispatch ---------------------------------------------
+
+    def _dispatch_ready(self, responses: list, *, drain: bool = False) -> None:
+        now = self.clock.now_us
+        for class_key in list(self._queues):
+            queue = self._queues[class_key]
+            while queue:
+                oldest = min(a.admit_us for a in queue)
+                full = len(queue) >= self.max_batch
+                aged = now >= oldest + self.max_wait_us
+                if not (full or aged or drain):
+                    break
+                # EDF within the class: earliest deadline first, then
+                # arrival, then rid — a total, deterministic order.
+                queue.sort(key=lambda a: (a.deadline_us, a.arrival_us, a.rid))
+                batch, self._queues[class_key] = (
+                    queue[:self.max_batch], queue[self.max_batch:])
+                queue = self._queues[class_key]
+                self._dispatch(class_key, batch, responses)
+            if not self._queues[class_key]:
+                del self._queues[class_key]
+
+    def _dispatch(self, class_key: tuple, batch: list, responses: list) -> None:
+        rk, degraded = class_key
+        bid = len(self.batch_log)
+        now = self.clock.now_us
+        self.batch_log.append((bid, now, tuple(a.rid for a in batch)))
+        self.stats.batches += 1
+        cp = self.db.compiled(self._class_plan(rk, degraded), mesh=self.mesh)
+        q = jnp.stack([jnp.asarray(a.req.query, jnp.float32) for a in batch])
+        n = q.shape[0]
+        if self.overlap and cp.supports_split:
+            bucket = bucket_for(n, self.max_batch)
+            qpad, qvalid = pad_chunk(q, bucket)
+            self.stats.padded_slots += bucket - n
+            cand = cp.run_front(qpad, qvalid=qvalid)
+            # retire the PREVIOUS batch's refine only after this front is
+            # enqueued — the double buffer.
+            self._retire_inflight(responses)
+            self._inflight = _Inflight(bid=bid, batch=batch, cp=cp,
+                                       qpad=qpad, cand=cand, n=n,
+                                       dispatch_us=now, degraded=degraded)
+        else:
+            self._retire_inflight(responses)
+            res = cp.execute(q, pad=True)   # executor buckets internally
+            self.stats.padded_slots += bucket_for(n, self.max_batch) - n
+            self._complete(bid, batch, cp, res, n, now, degraded, responses,
+                           split=False)
+
+    def _retire_inflight(self, responses: list) -> None:
+        fl = self._inflight
+        if fl is None:
+            return
+        self._inflight = None
+        res = fl.cp.run_finish(fl.qpad, fl.cand)
+        self._complete(fl.bid, fl.batch, fl.cp, res, fl.n, fl.dispatch_us,
+                       fl.degraded, responses, split=True)
+
+    # -- completion --------------------------------------------------------
+
+    def _complete(self, bid: int, batch: list, cp, res, n: int,
+                  dispatch_us: float, degraded: bool, responses: list,
+                  *, split: bool) -> None:
+        cost = res.cost
+        front_s = cost.tier_seconds(Tier.HBM)
+        # per-batch host dispatch round trip rides on the front stage —
+        # this is the fixed cost the coalescer amortizes over the batch
+        f_us = front_s * 1e6 + self.dispatch_overhead_us
+        r_us = max(cost.total_seconds() - front_s, 0.0) * 1e6
+        if self.overlap and split:
+            start_f = max(dispatch_us, self._front_free_us)
+            front_done = start_f + f_us
+            self._front_free_us = front_done
+            start_r = max(front_done, self._refine_free_us)
+            done = start_r + r_us
+            self._refine_free_us = done
+        else:
+            start = max(dispatch_us, self._busy_free_us)
+            done = start + f_us + r_us
+            self._busy_free_us = done
+        self.total_cost.merge(cost)
+        ids = np.asarray(res.ids[:n])
+        dists = np.asarray(res.distances[:n])
+        for i, adm in enumerate(batch):
+            if self.cache is not None and adm.qkey is not None:
+                self.cache.insert(adm.qkey, cp.plan, cp.generation,
+                                  ids[i], dists[i], degraded=degraded)
+            responses.append(Response(
+                rid=adm.rid, tenant=adm.req.tenant,
+                ids=ids[i], distances=dists[i],
+                degraded=degraded, cache_hit=False,
+                arrival_us=adm.arrival_us, admit_us=adm.admit_us,
+                done_us=done, batch=bid, cost=cost))
+
+    # -- event loop --------------------------------------------------------
+
+    def run(self, requests: list) -> list:
+        """Run a full request trace to drain; responses in rid order.
+
+        Discrete-event loop: the clock jumps between arrival instants and
+        coalescer close deadlines — nothing happens between events, so
+        the simulation is exact and deterministic.
+        """
+        pending = sorted(
+            requests,
+            key=lambda r: (r.arrival_us,
+                           r.rid if r.rid is not None else math.inf))
+        pending = [r if r.rid is not None
+                   else dataclasses.replace(r, rid=self._fresh_rid())
+                   for r in pending]
+        responses: list[Response] = []
+        i = 0
+        while i < len(pending) or self._queues:
+            times = []
+            if i < len(pending):
+                times.append(pending[i].arrival_us)
+            for queue in self._queues.values():
+                oldest = min(a.admit_us for a in queue)
+                times.append(oldest + self.max_wait_us)
+            self.clock.advance_to(min(times))
+            now = self.clock.now_us
+            arrivals = []
+            while i < len(pending) and pending[i].arrival_us <= now:
+                arrivals.append(pending[i])
+                i += 1
+            # EDF admission order at this instant.
+            arrivals.sort(key=lambda r: (r.deadline_us, r.arrival_us, r.rid))
+            for req in arrivals:
+                self._admit(req, responses)
+            self._dispatch_ready(responses)
+        self._dispatch_ready(responses, drain=True)
+        self._retire_inflight(responses)
+        responses.sort(key=lambda r: r.rid)
+        return responses
+
+    def _fresh_rid(self) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        return rid
+
+    def serve(self, queries, *, k: int | None = None,
+              tenant: str = "default") -> list:
+        """Convenience: submit one request per row at the current clock
+        instant and run to drain.  Responses come back in input order."""
+        queries = jnp.asarray(queries, jnp.float32)
+        now = self.clock.now_us
+        reqs = [Request(query=queries[i], tenant=tenant, k=k,
+                        arrival_us=now, rid=self._fresh_rid())
+                for i in range(queries.shape[0])]
+        return self.run(reqs)

@@ -1,17 +1,24 @@
 """Serving engine + RAG loop integration tests, plus the serving-side cost
 accounting: ``Retriever.total_cost`` accumulation, ``QueryCost`` merge /
-copy round-trips, and the parallel-shard fold (``merge_parallel``)."""
+copy round-trips, and the parallel-shard fold (``merge_parallel``) — and
+the continuous-batching ``ServingEngine``: bit-identity against sequential
+``db.query`` on every layout × backend, result-cache correctness and
+streaming invalidation, the admission scheduler under the virtual clock,
+and the no-recompile pin for bucket-padded dispatch."""
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.anns import PipelineConfig, build
+from repro.anns import (Database, PipelineConfig, QueryPlan,
+                        StreamingConfig, StreamingIndex, build)
 from repro.configs import ARCHS
 from repro.data import make_dataset
 from repro.memory import QueryCost, Tier
 from repro.models import build_model
-from repro.serving import Engine, Retriever, rag_answer
+from repro.serving import (Engine, Request, ResultCache, Retriever,
+                           ServingEngine, TenantQoS, rag_answer)
 
 
 @pytest.fixture(scope="module")
@@ -56,10 +63,11 @@ class TestRAG:
 
         prompts = jax.random.randint(jax.random.PRNGKey(3), (2, 4), 0,
                                      cfg.vocab)
-        gen, ids, cost = rag_answer(eng, index, embed_fn, prompts, k=5,
-                                    decode_steps=4)
-        assert gen.shape == (2, 4) and ids.shape == (2, 5)
-        assert cost.total_seconds() > 0
+        res = rag_answer(eng, index, embed_fn, prompts, k=5,
+                         decode_steps=4)
+        assert res.tokens.shape == (2, 4) and res.ids.shape == (2, 5)
+        assert res.cost.total_seconds() > 0
+        assert res.degraded is False
         assert eng.stats.retrievals == 2
 
 
@@ -182,3 +190,232 @@ class TestRetrieverAccounting:
         assert jnp.array_equal(ids_p, ids_s)
         assert {k: (t.accesses, t.bytes) for k, t in cost_p.ledger.items()} \
             == {k: (t.accesses, t.bytes) for k, t in cost_s.ledger.items()}
+
+
+# ------------------------------------------------- continuous batching
+
+
+@pytest.fixture(scope="module")
+def serve_ds():
+    ds = make_dataset(jax.random.PRNGKey(7), n=1500, d=16, n_queries=16)
+    cfg = PipelineConfig(dim=16, pq_m=4, pq_k=16, nlist=8, nprobe=2,
+                         final_k=5, refine_budget=10)
+    return ds, build(jax.random.PRNGKey(8), ds.x, cfg)
+
+
+def _ledger(cost):
+    return {k: (t.accesses, t.bytes) for k, t in cost.ledger.items()}
+
+
+class TestServingEngineBitIdentity:
+    """The acceptance pin: engine responses — ids, exact distances, and
+    the summed traffic ledger — are bit-identical to sequential
+    ``db.query`` calls for the same requests, on every layout × backend.
+    Batching only regroups per-query-deterministic work; padded rows are
+    masked out of candidates and counters by qvalid."""
+
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    @pytest.mark.parametrize("layout", ["static", "sharded", "streaming"])
+    def test_matches_sequential_query(self, serve_ds, layout, backend):
+        ds, index = serve_ds
+        idx = (StreamingIndex(index, StreamingConfig(auto_compact=False))
+               if layout == "streaming" else index)
+        shards = 1 if layout == "sharded" else None
+        plan = QueryPlan(backend=backend, shards=shards)
+        eng = ServingEngine(idx, plan=plan, max_batch=4, max_wait_us=100.0,
+                            cache=ResultCache())
+        # distinct queries → the cache is live but every lookup misses,
+        # so the datapath runs for all of them (batch sizes vary: the
+        # 37us spacing vs the 100us close age coalesces 1-4 per batch)
+        reqs = [Request(query=ds.queries[i], arrival_us=i * 37.0, rid=i)
+                for i in range(10)]
+        resp = eng.run(reqs)
+        assert [r.rid for r in resp] == list(range(10))
+        assert eng.stats.cache_hits == 0
+        assert eng.stats.batches >= 2      # actually coalesced + split
+        db = Database.wrap(idx)
+        seq_cost = QueryCost()
+        for i, r in enumerate(resp):
+            ref = db.query(ds.queries[i][None], plan=plan, k=5)
+            assert np.array_equal(r.ids, np.asarray(ref.ids[0]))
+            assert np.array_equal(r.distances, np.asarray(ref.distances[0]))
+            seq_cost.merge(ref.cost)
+        assert _ledger(eng.total_cost) == _ledger(seq_cost)
+
+    def test_overlap_off_same_results(self, serve_ds):
+        ds, index = serve_ds
+        resp_ov = ServingEngine(index, max_batch=4, overlap=True).serve(
+            ds.queries[:8], k=5)
+        resp_sr = ServingEngine(index, max_batch=4, overlap=False).serve(
+            ds.queries[:8], k=5)
+        for a, b in zip(resp_ov, resp_sr):
+            assert np.array_equal(a.ids, b.ids)
+            assert np.array_equal(a.distances, b.distances)
+
+
+class TestResultCache:
+    def test_hit_miss_accounting_and_bit_identity(self, serve_ds):
+        ds, index = serve_ds
+        cache = ResultCache()
+        eng = ServingEngine(index, max_batch=4, max_wait_us=50.0,
+                            cache=cache)
+        first = eng.serve(ds.queries[:4], k=5)
+        assert (cache.stats.misses, cache.stats.hits,
+                cache.stats.inserts) == (4, 0, 4)
+        second = eng.serve(ds.queries[:4], k=5)
+        assert cache.stats.hits == 4 and cache.stats.misses == 4
+        for a, b in zip(first, second):
+            assert not a.cache_hit and b.cache_hit
+            assert b.cost is None and b.batch is None
+            assert np.array_equal(a.ids, b.ids)
+            assert np.array_equal(a.distances, b.distances)
+        # hits never re-enter the datapath: no new batches were formed
+        assert eng.stats.batches == 1
+
+    def test_lru_eviction(self):
+        cache = ResultCache(capacity=2)
+        for tag in (b"a", b"b", b"c"):
+            cache.insert(tag, "plan", 0, np.arange(3), np.arange(3.0))
+        assert len(cache) == 2 and cache.stats.evictions == 1
+        assert cache.lookup(b"a", "plan", 0) is None       # evicted (LRU)
+        assert cache.lookup(b"c", "plan", 0) is not None
+
+    def test_plan_and_generation_partition_keys(self):
+        cache = ResultCache()
+        cache.insert(b"q", "planA", 0, np.arange(3), np.arange(3.0))
+        assert cache.lookup(b"q", "planB", 0) is None
+        assert cache.lookup(b"q", "planA", 1) is None
+        assert cache.lookup(b"q", "planA", 0) is not None
+
+    @pytest.mark.parametrize("backend", ["reference", "pallas"])
+    def test_streaming_mutations_invalidate(self, serve_ds, backend):
+        ds, index = serve_ds
+        st = StreamingIndex(index, StreamingConfig(auto_compact=False))
+        cache = ResultCache()
+        eng = ServingEngine(st, plan=QueryPlan(backend=backend),
+                            max_batch=4, max_wait_us=50.0, cache=cache)
+
+        def warm():
+            eng.serve(ds.queries[:4], k=5)
+            assert len(cache) >= 4
+
+        warm()
+        inv0 = cache.stats.invalidations
+        gids = st.insert(ds.queries[:2])
+        assert len(cache) == 0
+        assert cache.stats.invalidations > inv0
+        # post-mutation serves are fresh misses, then hits again
+        hits0 = cache.stats.hits
+        warm()
+        assert cache.stats.hits == hits0
+
+        for mutate in (lambda: st.delete(gids[:1]),
+                       lambda: st.compact(),
+                       lambda: st.rebalance(2)):
+            warm()
+            mutate()
+            assert len(cache) == 0, "mutation must purge stale entries"
+
+
+class TestScheduler:
+    def test_deadline_ordered_admission(self, serve_ds):
+        ds, index = serve_ds
+        eng = ServingEngine(index, max_batch=2, max_wait_us=100.0)
+        # simultaneous arrivals, deadlines reversed w.r.t. rid: EDF must
+        # batch (3,2) before (1,0)
+        reqs = [Request(query=ds.queries[i], arrival_us=0.0,
+                        deadline_us=1000.0 - 100.0 * i, rid=i)
+                for i in range(4)]
+        eng.run(reqs)
+        assert eng.batch_log[0][2] == (3, 2)
+        assert eng.batch_log[1][2] == (1, 0)
+
+    def test_close_on_size(self, serve_ds):
+        ds, index = serve_ds
+        eng = ServingEngine(index, max_batch=4, max_wait_us=10_000.0)
+        reqs = [Request(query=ds.queries[i], arrival_us=5.0, rid=i)
+                for i in range(4)]
+        eng.run(reqs)
+        # a full batch closes immediately — no max_wait aging
+        assert eng.batch_log == [(0, 5.0, (0, 1, 2, 3))]
+
+    def test_close_on_age(self, serve_ds):
+        ds, index = serve_ds
+        eng = ServingEngine(index, max_batch=4, max_wait_us=200.0)
+        eng.run([Request(query=ds.queries[0], arrival_us=10.0, rid=0)])
+        # a lone request waits out max_wait_us, then dispatches
+        assert eng.batch_log == [(0, 210.0, (0,))]
+
+    def test_token_bucket_fairness(self, serve_ds):
+        ds, index = serve_ds
+        qos = {"heavy": TenantQoS(rate_rps=1000.0, burst=2.0)}
+        eng = ServingEngine(index, max_batch=4, max_wait_us=100.0, qos=qos)
+        reqs = []
+        rid = 0
+        for i in range(16):            # heavy: 10k rps, 10x its contract
+            reqs.append(Request(query=ds.queries[i % 8], tenant="heavy",
+                                arrival_us=i * 100.0, rid=rid))
+            rid += 1
+        for i in range(3):             # light tenant: unthrottled
+            reqs.append(Request(query=ds.queries[8 + i], tenant="light",
+                                arrival_us=400.0 + i * 300.0, rid=rid))
+            rid += 1
+        resp = eng.run(reqs)
+        assert len(resp) == 19         # degraded ≠ dropped: all progress
+        heavy = [r for r in resp if r.tenant == "heavy"]
+        light = [r for r in resp if r.tenant == "light"]
+        assert not any(r.degraded for r in light)
+        assert sum(r.degraded for r in heavy) >= 10   # over-rate → degraded
+        assert sum(not r.degraded for r in heavy) >= 2  # burst honored
+        # degraded responses are full responses (k results, finite time)
+        for r in heavy:
+            assert r.ids.shape == (5,)
+            assert np.isfinite(r.done_us)
+
+    def test_degraded_runs_reduced_refine_budget(self, serve_ds):
+        ds, index = serve_ds
+        eng = ServingEngine(index, degrade_factor=2)
+        full = eng._class_plan(5, False)
+        deg = eng._class_plan(5, True)
+        assert deg.refine_budget == max(5, full.refine_budget // 2)
+        assert deg.refine_budget < full.refine_budget
+
+    def test_deterministic_batch_boundaries(self, serve_ds):
+        ds, index = serve_ds
+        rng = np.random.default_rng(3)
+        arr = np.cumsum(rng.exponential(80.0, size=12))
+
+        def trace():
+            return [Request(query=ds.queries[i % 8],
+                            arrival_us=float(arr[i]),
+                            deadline_us=float(arr[i]) + 500.0, rid=i)
+                    for i in range(12)]
+
+        e1 = ServingEngine(index, max_batch=4, max_wait_us=150.0,
+                           cache=ResultCache())
+        e2 = ServingEngine(index, max_batch=4, max_wait_us=150.0,
+                           cache=ResultCache())
+        r1, r2 = e1.run(trace()), e2.run(trace())
+        assert e1.batch_log == e2.batch_log
+        assert [(r.rid, r.done_us, r.cache_hit) for r in r1] == \
+            [(r.rid, r.done_us, r.cache_hit) for r in r2]
+
+
+class TestBucketNoRecompile:
+    def test_bucket_reuse_never_recompiles(self, serve_ds):
+        """Satellite pin: once the power-of-two buckets are traced,
+        retrieving any batch size reuses them — the jitted stage caches
+        stop growing (``Retriever.retrieve`` pads via ``bucket=True``)."""
+        from repro.anns import stages
+        ds, index = serve_ds
+        r = Retriever(index=index, micro_batch=8)
+        for n in (5, 3, 2, 1):          # warm buckets 8, 4, 2, 1
+            r.retrieve(ds.queries[:n], k=5)
+        sizes = (stages._ivf_candidates._cache_size(),
+                 stages._reference_refine._cache_size(),
+                 stages._rerank_survivors._cache_size())
+        for n in (6, 7, 8, 3, 2, 4, 1, 5):   # every bucket re-hit
+            r.retrieve(ds.queries[:n], k=5)
+        assert (stages._ivf_candidates._cache_size(),
+                stages._reference_refine._cache_size(),
+                stages._rerank_survivors._cache_size()) == sizes
