@@ -40,6 +40,12 @@ if __name__ == "__main__":          # must run BEFORE anything imports jax
                      help="requests per (config, rate) trace")
     _ap.add_argument("--rates", type=str, default="2000,8000",
                      help="comma-separated offered loads (requests/s)")
+    _ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                     help="export a Chrome-trace JSON of the LAST "
+                          "(config, rate) run to PATH")
+    _ap.add_argument("--prom", type=str, default=None, metavar="PATH",
+                     help="export the last run's metrics registry in "
+                          "Prometheus text format to PATH")
     _CLI_ARGS = _ap.parse_args()
     if _CLI_ARGS.devices and _CLI_ARGS.devices > 1 and \
             "xla_force_host_platform_device_count" not in \
@@ -55,6 +61,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import dataset, emit, fatrq_index, write_json
+from repro.obs import export, trace as obs_trace
 from repro.serving import QueryPlan, Request, ResultCache, ServingEngine
 
 _MAX_BATCH = 8
@@ -74,14 +81,16 @@ def _trace(ds, *, n_requests: int, rate_rps: float, seed: int = 0):
 
 
 def _run_config(index, ds, *, name: str, rate_rps: float, n_requests: int,
-                batching: bool, cache: bool, shards: int | None) -> None:
+                batching: bool, cache: bool, shards: int | None,
+                tracer=None) -> "ServingEngine":
     plan = QueryPlan(shards=shards) if shards and shards > 1 else None
     eng = ServingEngine(
         index, plan=plan, max_batch=_MAX_BATCH, max_wait_us=200.0,
         batching=batching, overlap=batching,  # the baseline is strictly
         # serial: one blocking Retriever call per request, nothing to
         # double-buffer against
-        cache=ResultCache(capacity=256) if cache else None)
+        cache=ResultCache(capacity=256) if cache else None,
+        tracer=tracer)
     reqs = _trace(ds, n_requests=n_requests, rate_rps=rate_rps)
     resp = eng.run(reqs)
     lat = np.array([r.latency_us for r in resp])
@@ -98,24 +107,43 @@ def _run_config(index, ds, *, name: str, rate_rps: float, n_requests: int,
          cache_hits=eng.stats.cache_hits,
          padded_slots=eng.stats.padded_slots,
          devices=shards or 1)
+    return eng
 
 
 def run(*, devices: int | None = None, n_requests: int = 96,
-        rates=(2000.0, 8000.0)) -> None:
+        rates=(2000.0, 8000.0), trace_path: str | None = None,
+        prom_path: str | None = None) -> None:
     ds, index = fatrq_index()
     avail = len(jax.devices())
     shards = min(devices or 1, avail)
+    want_obs = trace_path is not None or prom_path is not None
+    eng = tracer = None
     for rate in rates:
         for name, batching, cache in (("single", False, False),
                                       ("batched", True, False),
                                       ("batched_cache", True, True)):
-            _run_config(index, ds, name=name, rate_rps=float(rate),
-                        n_requests=n_requests, batching=batching,
-                        cache=cache, shards=shards)
+            # only the LAST (config, rate) run is traced — tracing syncs
+            # every stage, so earlier (exported-as-BENCH) runs stay on
+            # the untraced fast path.  The virtual-clock numbers are
+            # identical either way (pinned in tests/test_obs.py).
+            last = rate == rates[-1] and name == "batched_cache"
+            if want_obs and last:
+                tracer = obs_trace.Tracer()
+            eng = _run_config(index, ds, name=name, rate_rps=float(rate),
+                              n_requests=n_requests, batching=batching,
+                              cache=cache, shards=shards,
+                              tracer=tracer if last else None)
+    if trace_path is not None and tracer is not None:
+        export.write_chrome_trace(tracer.spans, trace_path)
+        print(f"# wrote {trace_path}")
+    if prom_path is not None and eng is not None:
+        export.write_prometheus(eng.registry, prom_path)
+        print(f"# wrote {prom_path}")
 
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
     run(devices=_CLI_ARGS.devices, n_requests=_CLI_ARGS.requests,
-        rates=[float(r) for r in _CLI_ARGS.rates.split(",")])
+        rates=[float(r) for r in _CLI_ARGS.rates.split(",")],
+        trace_path=_CLI_ARGS.trace, prom_path=_CLI_ARGS.prom)
     write_json("bench_serving")

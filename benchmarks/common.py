@@ -10,8 +10,10 @@ records accumulated since the last call into a machine-readable
 
 from __future__ import annotations
 
+import datetime
 import functools
 import json
+import subprocess
 import time
 
 import jax
@@ -25,6 +27,26 @@ ROWS: list[str] = []
 RECORDS: list[dict] = []
 
 
+@functools.lru_cache(maxsize=1)
+def provenance() -> dict:
+    """Measurement-environment stamp written into every BENCH record:
+    git SHA (``null`` outside a checkout), UTC timestamp, jax version,
+    device platform, and device count (fake devices included — the
+    sharded benches force host platform devices via XLA_FLAGS)."""
+    try:
+        sha = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True,
+                             timeout=10).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    return {"git_sha": sha,
+            "timestamp_utc": datetime.datetime.now(
+                datetime.timezone.utc).isoformat(timespec="seconds"),
+            "jax_version": jax.__version__,
+            "platform": jax.default_backend(),
+            "device_count": jax.device_count()}
+
+
 def emit(name: str, us_per_call: float, derived: str = "",
          cost: QueryCost | None = None, plan: QueryPlan | None = None,
          **fields) -> None:
@@ -33,7 +55,9 @@ def emit(name: str, us_per_call: float, derived: str = "",
     ``plan`` is the resolved ``QueryPlan`` the measurement ran under; it is
     written into EVERY record (``None`` for rows that are not a planned
     search, e.g. kernel micro-benchmarks) so perf points in the
-    ``BENCH_*.json`` trajectory are attributable to an exact plan.
+    ``BENCH_*.json`` trajectory are attributable to an exact plan.  Every
+    record also carries the ``provenance()`` stamp so trajectory points
+    are attributable to a commit + measurement environment.
     """
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
@@ -45,6 +69,7 @@ def emit(name: str, us_per_call: float, derived: str = "",
         rec["cost_breakdown_s"] = cost.breakdown()
         rec["cost_total_s"] = cost.total_seconds()
     rec["plan"] = plan.to_record() if plan is not None else None
+    rec["provenance"] = provenance()
     rec.update(fields)
     RECORDS.append(rec)
 

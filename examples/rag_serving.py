@@ -13,6 +13,7 @@ from repro.anns import Database, PipelineConfig, QueryPlan
 from repro.configs import ARCHS
 from repro.data import make_dataset
 from repro.models import build_model
+from repro.obs import trace
 from repro.serving import Engine, Retriever, rag_answer
 
 
@@ -44,8 +45,10 @@ def main():
     prompts = jax.random.randint(jax.random.PRNGKey(3), (4, 8), 0,
                                  cfg.vocab)
     print("serving 4 batched RAG requests...")
-    res = rag_answer(engine, db.index, embed_fn, prompts,
-                     k=5, decode_steps=8, retriever=retriever)
+    tracer = trace.Tracer()
+    with trace.use(tracer):
+        res = rag_answer(engine, db.index, embed_fn, prompts,
+                         k=5, decode_steps=8, retriever=retriever)
     print(f"  resolved plan: {retriever.default_plan().resolve(pcfg)}")
     print(f"  retrieved ids (per request): {res.ids.tolist()}")
     print(f"  generated tokens: {res.tokens.tolist()}")
@@ -55,6 +58,22 @@ def main():
     print(f"  running ledger (capacity view): "
           f"{ {k: t.accesses for k, t in retriever.total_cost.ledger.items()} }")
     print(f"  engine stats: {engine.stats}")
+
+    # --- per-stage latency breakdown from the trace the retrieval just
+    # produced: wall time (this host, measured) next to the QueryCost
+    # Table-I modeled time that the perf gate pins, and their ratio.
+    print("per-stage latency breakdown (traced):")
+    for stage in ("front", "refine", "rerank"):
+        spans = tracer.by_name(stage)
+        if not spans:
+            continue
+        wall_ms = sum(s.wall_end_s - s.wall_start_s for s in spans) * 1e3
+        model = [s.attrs["model_s"] for s in spans if "model_s" in s.attrs]
+        model_ms = sum(model) * 1e3 if model else float("nan")
+        drift = wall_ms / model_ms if model_ms else float("nan")
+        print(f"  {stage:>7}: wall {wall_ms:8.3f} ms | "
+              f"modeled {model_ms:8.3f} ms | wall/model {drift:8.1f}x "
+              f"({len(spans)} span(s))")
 
 
 if __name__ == "__main__":

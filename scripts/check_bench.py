@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""CI perf-regression gate over the committed BENCH_*.json baselines.
+
+Compares a freshly generated bench record file against the baseline
+committed at HEAD and fails (exit 1) on regression.  Two modes, matching
+what is actually comparable across machines:
+
+* ``--bench serving`` — the serving bench's headline metrics are
+  VIRTUAL-clock / Table-I-modeled numbers (``us_per_call`` is the
+  modeled p50, ``p99_us``, ``qps_sustained``, ``cost_total_s``), fully
+  deterministic for a seeded trace on any machine — so they gate hard:
+  a fresh record worse than baseline by more than ``--tolerance``
+  (default 25%) fails.  Records match on ``(name, devices)``; baseline
+  records with no fresh counterpart are skipped (a CI leg only produces
+  its own device count).
+* ``--bench kernels`` — kernel micro-bench numbers are WALL time on the
+  runner, not comparable across machines; the gate only checks that
+  every baseline record name is still produced (a vanished record means
+  a bench regressed into not running).
+
+The baseline is read from ``git show HEAD:<file>`` so a smoke step that
+overwrote the workspace copy (bench scripts write in place) cannot
+compare a file against itself; falls back to the on-disk file outside a
+git checkout.
+
+Usage (as wired in .github/workflows/ci.yml):
+    python benchmarks/bench_serving.py --devices 8 --requests 48 --rates 4000
+    python scripts/check_bench.py --bench serving
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+
+SERVING_FILE = "BENCH_bench_serving.json"
+KERNELS_FILE = "BENCH_bench_kernels.json"
+
+# (metric, higher_is_worse) — every one a virtual-clock/modeled number
+SERVING_METRICS = (("us_per_call", True), ("p99_us", True),
+                   ("cost_total_s", True), ("qps_sustained", False))
+
+
+def load_baseline(path: str) -> dict:
+    """The committed baseline: HEAD's copy when available (the workspace
+    copy may have just been overwritten by the smoke run), else disk."""
+    try:
+        out = subprocess.run(["git", "show", f"HEAD:{path}"],
+                             capture_output=True, text=True, timeout=30)
+        if out.returncode == 0 and out.stdout.strip():
+            return json.loads(out.stdout)
+    except (OSError, subprocess.SubprocessError):
+        pass
+    with open(path) as f:
+        return json.load(f)
+
+
+def load_fresh(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _key(rec: dict) -> tuple:
+    return (rec["name"], rec.get("devices", 1))
+
+
+def check_serving(baseline: dict, fresh: dict, *, tolerance: float,
+                  allow_empty: bool) -> list[str]:
+    fresh_by_key = {_key(r): r for r in fresh["records"]}
+    failures: list[str] = []
+    compared = 0
+    for base in baseline["records"]:
+        new = fresh_by_key.get(_key(base))
+        if new is None:
+            continue          # other CI leg's device count
+        for metric, higher_worse in SERVING_METRICS:
+            if metric not in base or metric not in new:
+                continue
+            b, f = float(base[metric]), float(new[metric])
+            compared += 1
+            if b <= 0:
+                continue
+            ratio = f / b
+            bad = ratio > 1 + tolerance if higher_worse \
+                else ratio < 1 - tolerance
+            arrow = "↑" if f > b else "↓"
+            line = (f"{base['name']} devices={base.get('devices', 1)} "
+                    f"{metric}: {b:.6g} → {f:.6g} ({arrow}{abs(ratio - 1):.1%})")
+            if bad:
+                failures.append(line)
+                print(f"FAIL  {line}")
+            else:
+                print(f"ok    {line}")
+    if compared == 0 and not allow_empty:
+        failures.append("no comparable (name, devices) records between "
+                        "baseline and fresh — gate checked nothing")
+    return failures
+
+
+def check_kernels(baseline: dict, fresh: dict, *, allow_empty: bool
+                  ) -> list[str]:
+    base_names = {r["name"] for r in baseline["records"]}
+    fresh_names = {r["name"] for r in fresh["records"]}
+    missing = sorted(base_names - fresh_names)
+    for name in sorted(base_names & fresh_names):
+        print(f"ok    {name} still produced")
+    if not base_names and not allow_empty:
+        return ["baseline has no kernel records — gate checked nothing"]
+    return [f"kernel record vanished: {name}" for name in missing]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", choices=("serving", "kernels"),
+                    required=True)
+    ap.add_argument("--fresh", default=None,
+                    help="freshly generated record file (default: the "
+                         "bench's BENCH_*.json in the workspace)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline record file (default: HEAD's copy of "
+                         "the same file)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression on serving "
+                         "metrics (default 0.25)")
+    ap.add_argument("--allow-empty", action="store_true",
+                    help="do not fail when nothing was comparable")
+    args = ap.parse_args(argv)
+
+    default = SERVING_FILE if args.bench == "serving" else KERNELS_FILE
+    fresh = load_fresh(args.fresh or default)
+    baseline = load_baseline(args.baseline or default)
+
+    if args.bench == "serving":
+        failures = check_serving(baseline, fresh, tolerance=args.tolerance,
+                                 allow_empty=args.allow_empty)
+    else:
+        failures = check_kernels(baseline, fresh,
+                                 allow_empty=args.allow_empty)
+    if failures:
+        print(f"\n{len(failures)} perf-gate failure(s):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("\nperf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -57,6 +57,7 @@ from repro.anns.sharding import ShardedExecutor, ShardedIndex, \
     make_sharded_executor
 from repro.anns.streaming import StreamingIndex
 from repro.memory import QueryCost
+from repro.obs import trace
 
 __all__ = ["CompiledPlan", "Database", "QueryPlan", "SearchResult",
            "PlanError"]
@@ -319,13 +320,23 @@ class Database:
         gen = self.generation
         key = (gen, rp, mesh)
         hit = self._compiled.get(key)
+        trace.event("plan.compile", track="query", cache_hit=hit is not None,
+                    generation=gen, layout=self.layout)
         if hit is not None:
             return hit
         # prune executors compiled against superseded generations (their
         # fronts pin replaced device arrays)
         self._compiled = {kk: v for kk, v in self._compiled.items()
                           if kk[0] == gen}
+        with trace.span("plan.compile.build", track="query",
+                        layout=self.layout, generation=gen):
+            entry = self._build(rp, mesh)
+        self._compiled[key] = entry
+        return entry
 
+    def _build(self, rp: QueryPlan, mesh) -> tuple:
+        """Compile-miss path of ``_compile``: construct the executor (and
+        gid postmap) for a resolved plan."""
         if self.layout == "streaming":
             st: StreamingIndex = self.index
             if rp.shards is not None:
@@ -357,7 +368,6 @@ class Database:
                                micro_batch=rp.micro_batch,
                                refine_budget=rp.refine_budget)
             entry = (ex, None)
-        self._compiled[key] = entry
         return entry
 
     # -- querying ---------------------------------------------------------
@@ -393,17 +403,23 @@ class Database:
             p = dataclasses.replace(p, refine_budget=refine_budget)
         if micro_batch is not None:
             p = dataclasses.replace(p, micro_batch=micro_batch)
-        rp = self.validate(p)
-        ex, gid_map = self._compile(rp, mesh)
-        if rp.mode == "baseline":
-            ids, dists, out_cost = ex.execute_baseline(queries, k=rp.k,
-                                                       pad=bucket)
-            if cost is not None:
-                out_cost = cost.merge(out_cost)
-        else:
-            ids, dists, out_cost = ex.execute(queries, k=rp.k, cost=cost,
-                                              pad=bucket)
-        if gid_map is not None:
-            ids = gid_map[ids]
+        # attrs that touch ``queries`` are set only after validate: a bad
+        # plan must raise PlanError before queries are ever inspected
+        with trace.span("query", track="query", layout=self.layout) as sp_q:
+            with trace.span("plan.resolve", track="query"):
+                rp = self.validate(p)
+            sp_q.set_attrs(plan=rp.to_record(),
+                           n_queries=int(queries.shape[0]))
+            ex, gid_map = self._compile(rp, mesh)
+            if rp.mode == "baseline":
+                ids, dists, out_cost = ex.execute_baseline(queries, k=rp.k,
+                                                           pad=bucket)
+                if cost is not None:
+                    out_cost = cost.merge(out_cost)
+            else:
+                ids, dists, out_cost = ex.execute(queries, k=rp.k, cost=cost,
+                                                  pad=bucket)
+            if gid_map is not None:
+                ids = gid_map[ids]
         return SearchResult(ids=ids, distances=dists, cost=out_cost,
                             plan=rp)

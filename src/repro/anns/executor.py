@@ -28,6 +28,7 @@ from repro.anns.stages import (Counters, FrontStage, RefineBackend,
                                graph_for as _graph_for)  # noqa: F401 - compat
 from repro.index import graph as graph_mod
 from repro.memory import QueryCost, Tier
+from repro.obs import metrics, trace
 
 # import-time snapshots of the capability registry, kept as module
 # constants for pre-registry callers (stages.py has registered the
@@ -39,6 +40,11 @@ REFINE_BACKENDS = registry.backend_names()
 
 # measured scale of ADC + ternary adds per candidate (see benchmarks)
 _COMPUTE_S_PER_CAND = 1e-7
+
+# wall/modeled drift ratio buckets: <1 means the tier model over-charges,
+# large values are expected on the interpreted CPU backend
+_DRIFT_BUCKETS = (0.25, 0.5, 1.0, 2.0, 5.0, 10.0, 100.0, 1_000.0,
+                  10_000.0, 100_000.0)
 
 
 def _accumulate(total: Counters, new: Counters) -> Counters:
@@ -137,20 +143,93 @@ class SearchExecutor:
     def _chunks(self, queries: jax.Array):
         return iter_chunks(queries, self.micro_batch)
 
-    def _refine_rerank(self, chunk: jax.Array, cand, *, k: int, budget: int
+    def _refine_rerank(self, chunk: jax.Array, cand, *, k: int, budget: int,
+                       front_span=None
                        ) -> tuple[jax.Array, jax.Array, Counters]:
         """Refine + SSD rerank over a front-stage result: the shared tail
-        of ``execute`` and ``run_finish``."""
+        of ``execute`` and ``run_finish``.
+
+        When tracing is active the refine/rerank spans block on their
+        device results before closing (so wall times cover the device
+        work, not just the async enqueue) and this chunk's counters are
+        folded a second time to attach modeled per-stage seconds + the
+        wall/model drift ratio to the spans (``_attach_model``).  Both
+        are gated on ``trace.active()`` — disabled runs keep the async
+        single-transfer path and bit-identical results."""
         cfg = self.index.config
-        refined = self.backend.refine(chunk, cand, self.index.trq,
-                                      k=k, bound=cfg.bound, z=cfg.z)
-        topk, topk_d, n_ssd = stages_mod._rerank_survivors(
-            self.index.x, chunk, cand.ids, refined.est, refined.alive,
-            k=k, budget=budget)
+        tr = trace.active()
+        with trace.span("refine", track="query",
+                        backend=self.backend.name) as sp_refine:
+            refined = self.backend.refine(chunk, cand, self.index.trq,
+                                          k=k, bound=cfg.bound, z=cfg.z)
+            if tr is not None:
+                jax.block_until_ready(refined.est)
+        with trace.span("rerank", track="query", budget=budget) as sp_rerank:
+            topk, topk_d, n_ssd = stages_mod._rerank_survivors(
+                self.index.x, chunk, cand.ids, refined.est, refined.alive,
+                k=k, budget=budget)
+            if tr is not None:
+                jax.block_until_ready(topk)
         counters = dict(cand.counters)
         _accumulate(counters, refined.counters)
         _accumulate(counters, {"ssd_fetch": n_ssd})
+        if tr is not None:
+            self._attach_model(tr, {"front": front_span, "refine": sp_refine,
+                                    "rerank": sp_rerank}, counters)
         return topk, topk_d, counters
+
+    def _attach_model(self, tr, spans: dict, counters: Counters) -> None:
+        """Tracing-only: fold THIS chunk's counters into a throwaway
+        ledger and attach per-stage modeled seconds (front → HBM,
+        refine incl. handoff/delta → CXL, rerank → SSD) plus the
+        measured-wall / modeled drift ratio to the stage spans; observe
+        the drift into the ``fatrq_model_drift_ratio{stage=...}``
+        histogram.  Also emits one ``refine.l{lv}`` event per TRQ level
+        with that level's entering/delta candidate counts and modeled
+        CXL time — the per-level view the folded ledger flattens away.
+
+        Costs one extra device→host transfer per chunk; only runs when
+        a tracer is active."""
+        counts = _collect(counters)
+        cost = fold_counts(counts, cost=None, config=self.index.config,
+                           layout=self.index.layout,
+                           front_fold=self.front.fold_cost)
+        model_s = {"front": cost.tier_seconds(Tier.HBM),
+                   "refine": cost.tier_seconds(Tier.CXL),
+                   "rerank": cost.tier_seconds(Tier.SSD)}
+        drift = metrics.active().histogram(
+            "fatrq_model_drift_ratio",
+            "measured wall seconds / QueryCost-modeled seconds per stage",
+            labelnames=("stage",), buckets=_DRIFT_BUCKETS)
+        for stage, handle in spans.items():
+            if handle is None or handle.span is None:
+                continue
+            m = model_s[stage]
+            handle.set_attr("model_s", m)
+            wall = handle.span.wall_s
+            if wall is not None and m > 0:
+                ratio = wall / m
+                handle.set_attr("wall_model_drift", ratio)
+                drift.labels(stage=stage).observe(ratio)
+        # per-level refine annotation, mirroring fold_counts' level walk:
+        # level 0 streams every candidate, level ℓ ≥ 1 only survivors
+        sp_refine = spans.get("refine")
+        parent = (sp_refine.span.sid
+                  if sp_refine is not None and sp_refine.span is not None
+                  else None)
+        cxl = cost.model[Tier.CXL]
+        far = self.index.layout.far_bytes
+        n_alive = counts.get("refine_alive", 0)
+        for lv in range(self.index.config.trq_levels):
+            if lv == 0:
+                n_lv = counts.get("front_cand", 0)
+                n_lv_delta = counts.get("delta_cand", 0)
+            else:
+                n_lv = counts.get(f"refine_alive_l{lv}", n_alive)
+                n_lv_delta = counts.get(f"refine_alive_l{lv}_delta", 0)
+            tr.event(f"refine.l{lv}", track="query", parent=parent,
+                     level=lv, entering=int(n_lv), delta=int(n_lv_delta),
+                     model_s=cxl.seconds(n_lv, n_lv * far))
 
     def execute(self, queries: jax.Array, *, k: int | None = None,
                 cost: QueryCost | None = None, pad: bool = False
@@ -166,27 +245,37 @@ class SearchExecutor:
         cfg = self.index.config
         k = k or cfg.final_k
         budget = search_budget(cfg, k, self.refine_budget)
+        tr = trace.active()
 
-        topk_parts: list[jax.Array] = []
-        dist_parts: list[jax.Array] = []
-        counters: Counters = {}
-        for chunk in self._chunks(queries):
-            n = chunk.shape[0]
-            if pad:
-                chunk, qvalid = pad_chunk(
-                    chunk, bucket_for(n, self.micro_batch))
-            else:
-                qvalid = None
-            cand = self.front.candidates(chunk, qvalid=qvalid)
-            topk, topk_d, cnt = self._refine_rerank(chunk, cand, k=k,
-                                                    budget=budget)
-            if topk.shape[0] != n:             # drop padded rows
-                topk, topk_d = topk[:n], topk_d[:n]
-            topk_parts.append(topk)
-            dist_parts.append(topk_d)
-            _accumulate(counters, cnt)
+        with trace.span("execute", track="query", front=self.front.name,
+                        backend=self.backend.name, k=k, budget=budget,
+                        n_queries=int(queries.shape[0])) as sp_ex:
+            topk_parts: list[jax.Array] = []
+            dist_parts: list[jax.Array] = []
+            counters: Counters = {}
+            for chunk in self._chunks(queries):
+                n = chunk.shape[0]
+                if pad:
+                    chunk, qvalid = pad_chunk(
+                        chunk, bucket_for(n, self.micro_batch))
+                else:
+                    qvalid = None
+                with trace.span("front", track="query",
+                                stage=self.front.name, n=n) as sp_front:
+                    cand = self.front.candidates(chunk, qvalid=qvalid)
+                    if tr is not None:
+                        jax.block_until_ready(cand.d0)
+                topk, topk_d, cnt = self._refine_rerank(
+                    chunk, cand, k=k, budget=budget, front_span=sp_front)
+                if topk.shape[0] != n:             # drop padded rows
+                    topk, topk_d = topk[:n], topk_d[:n]
+                topk_parts.append(topk)
+                dist_parts.append(topk_d)
+                _accumulate(counters, cnt)
 
-        cost = self._fold(counters, cost)
+            cost = self._fold(counters, cost)
+            if tr is not None:
+                _attach_ledger(sp_ex, cost)
         return _cat(topk_parts), _cat(dist_parts), cost
 
     # -- staged surface (serving engine's double-buffered dispatch) -------
@@ -197,8 +286,37 @@ class SearchExecutor:
         generation is enqueued on the device and returned as a
         ``Candidates`` handle.  The serving engine issues this for batch
         N+1 while batch N's ``run_finish`` (refine + rerank) drains —
-        JAX's async dispatch overlaps the two stages on device."""
-        return self.front.candidates(chunk, qvalid=qvalid)
+        JAX's async dispatch overlaps the two stages on device.  With a
+        tracer active the span blocks on the result (observer effect:
+        traced wall times are honest per-stage, at the price of the
+        device-side overlap; the virtual-clock pipeline model is
+        unaffected)."""
+        tr = trace.active()
+        with trace.span("front", track="query", stage=self.front.name,
+                        n=int(chunk.shape[0]), split=True) as sp:
+            cand = self.front.candidates(chunk, qvalid=qvalid)
+            if tr is not None:
+                jax.block_until_ready(cand.d0)
+        if tr is not None:
+            # split dispatch never reaches _attach_model with this span
+            # (run_finish folds a different chunk's handle), so attribute
+            # the front model time here from the front counters alone
+            counts = _collect(dict(cand.counters))
+            cost = QueryCost()
+            self.front.fold_cost(cost, counts, self.index.layout)
+            m = cost.tier_seconds(Tier.HBM)
+            sp.set_attr("model_s", m)
+            if sp.span.wall_s is not None and m > 0:
+                ratio = sp.span.wall_s / m
+                sp.set_attr("wall_model_drift", ratio)
+                metrics.active().histogram(
+                    "fatrq_model_drift_ratio",
+                    "measured wall seconds / QueryCost-modeled seconds "
+                    "per stage",
+                    labelnames=("stage",),
+                    buckets=_DRIFT_BUCKETS).labels(stage="front") \
+                    .observe(ratio)
+        return cand
 
     def run_finish(self, chunk: jax.Array, cand, *, k: int | None = None,
                    cost: QueryCost | None = None
@@ -210,9 +328,15 @@ class SearchExecutor:
         cfg = self.index.config
         k = k or cfg.final_k
         budget = search_budget(cfg, k, self.refine_budget)
-        topk, topk_d, counters = self._refine_rerank(chunk, cand, k=k,
-                                                     budget=budget)
-        return topk, topk_d, self._fold(counters, cost)
+        tr = trace.active()
+        with trace.span("finish", track="query", backend=self.backend.name,
+                        k=k, budget=budget) as sp_fin:
+            topk, topk_d, counters = self._refine_rerank(chunk, cand, k=k,
+                                                         budget=budget)
+            cost = self._fold(counters, cost)
+            if tr is not None:
+                _attach_ledger(sp_fin, cost)
+        return topk, topk_d, cost
 
     def search(self, queries: jax.Array, *, k: int | None = None,
                cost: QueryCost | None = None) -> tuple[jax.Array, QueryCost]:
@@ -227,32 +351,46 @@ class SearchExecutor:
         of the FULL candidate list from SSD — no far-memory refinement."""
         cfg = self.index.config
         k = k or cfg.final_k
-        topk_parts: list[jax.Array] = []
-        dist_parts: list[jax.Array] = []
-        counters: Counters = {}
-        for chunk in self._chunks(queries):
-            n = chunk.shape[0]
-            if pad:
-                chunk, qvalid = pad_chunk(
-                    chunk, bucket_for(n, self.micro_batch))
-            else:
-                qvalid = None
-            cand = self.front.candidates(chunk, qvalid=qvalid)
-            topk, topk_d, n_valid = stages_mod._rerank_all(
-                self.index.x, chunk, cand.ids, cand.valid, k=k)
-            if topk.shape[0] != n:             # drop padded rows
-                topk, topk_d = topk[:n], topk_d[:n]
-            topk_parts.append(topk)
-            dist_parts.append(topk_d)
-            _accumulate(counters, cand.counters)
-            _accumulate(counters, {"ssd_fetch": n_valid})
+        tr = trace.active()
+        with trace.span("execute", track="query", front=self.front.name,
+                        backend="baseline", k=k,
+                        n_queries=int(queries.shape[0])) as sp_ex:
+            topk_parts: list[jax.Array] = []
+            dist_parts: list[jax.Array] = []
+            counters: Counters = {}
+            for chunk in self._chunks(queries):
+                n = chunk.shape[0]
+                if pad:
+                    chunk, qvalid = pad_chunk(
+                        chunk, bucket_for(n, self.micro_batch))
+                else:
+                    qvalid = None
+                with trace.span("front", track="query",
+                                stage=self.front.name, n=n):
+                    cand = self.front.candidates(chunk, qvalid=qvalid)
+                    if tr is not None:
+                        jax.block_until_ready(cand.d0)
+                with trace.span("rerank", track="query", baseline=True):
+                    topk, topk_d, n_valid = stages_mod._rerank_all(
+                        self.index.x, chunk, cand.ids, cand.valid, k=k)
+                    if tr is not None:
+                        jax.block_until_ready(topk)
+                if topk.shape[0] != n:             # drop padded rows
+                    topk, topk_d = topk[:n], topk_d[:n]
+                topk_parts.append(topk)
+                dist_parts.append(topk_d)
+                _accumulate(counters, cand.counters)
+                _accumulate(counters, {"ssd_fetch": n_valid})
 
-        counts = _collect(counters)
-        cost = QueryCost()
-        lay = self.index.layout
-        self.front.fold_cost(cost, counts, lay)
-        cost.record("rerank", Tier.SSD, counts["ssd_fetch"], lay.ssd_bytes)
-        cost.add_compute(_COMPUTE_S_PER_CAND * counts["front_cand"])
+            counts = _collect(counters)
+            cost = QueryCost()
+            lay = self.index.layout
+            self.front.fold_cost(cost, counts, lay)
+            cost.record("rerank", Tier.SSD, counts["ssd_fetch"],
+                        lay.ssd_bytes)
+            cost.add_compute(_COMPUTE_S_PER_CAND * counts["front_cand"])
+            if tr is not None:
+                _attach_ledger(sp_ex, cost)
         return _cat(topk_parts), _cat(dist_parts), cost
 
     def search_baseline(self, queries: jax.Array, *, k: int | None = None
@@ -269,6 +407,20 @@ class SearchExecutor:
         return fold_counts(counts, cost=cost, config=self.index.config,
                            layout=self.index.layout,
                            front_fold=self.front.fold_cost)
+
+
+def _attach_ledger(handle, cost: QueryCost) -> None:
+    """Attach the folded Table-I ledger + modeled breakdown to a span.
+
+    Note the ledger reflects the ``cost`` object AFTER the fold — when a
+    caller threads a running ``cost=`` across calls (serving batch
+    totals) the attrs carry the cumulative state, matching what the
+    caller receives."""
+    handle.set_attrs(
+        ledger={key: [t.accesses, t.bytes]
+                for key, t in sorted(cost.ledger.items())},
+        model_breakdown_s=cost.breakdown(),
+        model_total_s=cost.total_seconds())
 
 
 def fold_counts(counts: dict[str, int], *, cost: QueryCost | None, config,

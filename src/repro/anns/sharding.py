@@ -73,8 +73,9 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.anns import registry
-from repro.anns.executor import (_accumulate, _cat, bucket_for, fold_counts,
-                                 iter_chunks, pad_chunk, search_budget)
+from repro.anns.executor import (_accumulate, _attach_ledger, _cat,
+                                 bucket_for, fold_counts, iter_chunks,
+                                 pad_chunk, search_budget)
 from repro.anns.stages import (Candidates, Counters, adc_score,
                                fold_graph_front_cost, fold_ivf_front_cost,
                                graph_for, rank_centroid_lists)
@@ -83,7 +84,8 @@ from repro.core.decomposition import RecordScalars
 from repro.core.estimator import pooled_k_smallest
 from repro.core.trq import TRQCodes, TRQLevel
 from repro.index import graph as graph_mod
-from repro.memory import QueryCost, RecordLayout
+from repro.memory import QueryCost, RecordLayout, Tier
+from repro.obs import trace
 from repro.quant import pq as pq_mod
 
 AXIS = "search"
@@ -591,32 +593,52 @@ class ShardedExecutor:
         k = k or cfg.final_k
         budget = search_budget(cfg, k, self.refine_budget)
         rec_db = (si.pq_codes, si.trq.levels, si.trq.scalars, si.x, si.gid)
+        tr = trace.active()
 
-        topk_parts: list[jax.Array] = []
-        dist_parts: list[jax.Array] = []
-        counters: Counters = {}
-        for chunk in iter_chunks(queries, self.micro_batch):
-            n = chunk.shape[0]
-            if pad:
-                chunk, qvalid = pad_chunk(
-                    chunk, bucket_for(n, self.micro_batch))
-            else:
-                qvalid = jnp.ones((n,), bool)
-            topk, topk_d, cnt = _sharded_search(
-                si.mesh, chunk, qvalid, si.front_rep, si.codebook,
-                si.trq.model, si.front_db, rec_db, dim=si.trq.dim, k=k,
-                budget=budget, bound=cfg.bound, z=cfg.z,
-                backend=self.backend, front=si.front,
-                front_args=si.front_args)
-            if topk.shape[0] != n:             # drop padded rows
-                topk, topk_d = topk[:n], topk_d[:n]
-            topk_parts.append(topk)
-            dist_parts.append(topk_d)
-            _accumulate(counters, cnt)
+        with trace.span("execute", track="query", front=si.front,
+                        backend=self.backend, k=k, budget=budget,
+                        shards=si.n_shards, fused=True,
+                        n_queries=int(queries.shape[0])) as sp_ex:
+            topk_parts: list[jax.Array] = []
+            dist_parts: list[jax.Array] = []
+            counters: Counters = {}
+            for chunk in iter_chunks(queries, self.micro_batch):
+                n = chunk.shape[0]
+                if pad:
+                    chunk, qvalid = pad_chunk(
+                        chunk, bucket_for(n, self.micro_batch))
+                else:
+                    qvalid = jnp.ones((n,), bool)
+                topk, topk_d, cnt = _sharded_search(
+                    si.mesh, chunk, qvalid, si.front_rep, si.codebook,
+                    si.trq.model, si.front_db, rec_db, dim=si.trq.dim, k=k,
+                    budget=budget, bound=cfg.bound, z=cfg.z,
+                    backend=self.backend, front=si.front,
+                    front_args=si.front_args)
+                if topk.shape[0] != n:             # drop padded rows
+                    topk, topk_d = topk[:n], topk_d[:n]
+                topk_parts.append(topk)
+                dist_parts.append(topk_d)
+                _accumulate(counters, cnt)
+            if tr is not None:
+                jax.block_until_ready(topk_parts[-1])
 
-        merged = self._fold(counters)
-        if cost is not None:
-            merged = cost.merge(merged)
+            merged = self._fold(counters)
+            if tr is not None:
+                # the shard_map body fuses front/refine/rerank into one
+                # compiled region — no host-side stage boundaries exist to
+                # time, so emit model-attributed stage events instead
+                # (fused=True) to keep the span↔ledger coverage invariant
+                # on the sharded layout.
+                sid = sp_ex.span.sid
+                for stage, tier in (("front", Tier.HBM),
+                                    ("refine", Tier.CXL),
+                                    ("rerank", Tier.SSD)):
+                    tr.event(stage, track="query", parent=sid, fused=True,
+                             model_s=merged.tier_seconds(tier))
+                _attach_ledger(sp_ex, merged)
+            if cost is not None:
+                merged = cost.merge(merged)
         return _cat(topk_parts), _cat(dist_parts), merged
 
     def search(self, queries: jax.Array, *, k: int | None = None,

@@ -84,6 +84,7 @@ from repro.core import trq as trq_mod
 from repro.index import graph as graph_mod
 from repro.index import ivf as ivf_mod
 from repro.memory import QueryCost
+from repro.obs import metrics as obs_metrics, trace
 from repro.quant import pq as pq_mod
 from repro.quant.kmeans import assign
 
@@ -374,6 +375,28 @@ class StreamingIndex:
         for fn in list(self._gen_hooks):
             fn(self, self.generation)
 
+    def _observe_mutation(self, op: str, **attrs) -> None:
+        """Mutation observability: always-on cheap metrics (mutation
+        counter by op + tombstone/delta drift gauges), and — only when a
+        tracer is active — an ``index.<op>`` event carrying the FULL
+        drift picture (``drift()`` re-runs ``lpt_assign`` under a live
+        shard assignment, too expensive for the untraced path)."""
+        reg = obs_metrics.active()
+        reg.counter("streaming_mutations_total", "index mutations by op",
+                    labelnames=("op",)).labels(op=op).inc()
+        live, tomb = self.n_live, self.n_tombstones
+        reg.gauge("streaming_tombstone_frac",
+                  "tombstoned fraction of tracked rows").set(
+                      tomb / max(live + tomb, 1))
+        reg.gauge("streaming_delta_frac",
+                  "delta-page rows over live rows").set(
+                      self.n_delta_rows / max(live, 1))
+        if trace.active() is not None:
+            payload = {"generation": self.generation, "n_live": live,
+                       **self.drift()}
+            payload.update(attrs)
+            trace.event(f"index.{op}", track="index", **payload)
+
     def _grow_rows(self, need: int) -> None:
         new_cap = max(need, 2 * self.cap_rows)
         self.pq_codes = _pad_rows(self.pq_codes, new_cap)
@@ -454,6 +477,7 @@ class StreamingIndex:
         self.delta_len += counts
 
         self._invalidate()
+        self._observe_mutation("insert", n=b)
         if self.scfg.auto_compact:
             self.maybe_compact()
         return gids
@@ -472,6 +496,7 @@ class StreamingIndex:
             self.alive[row] = False
         self.n_tombstones += len(gids)
         self._invalidate()
+        self._observe_mutation("delete", n=len(gids))
         if self.scfg.auto_compact:
             self.maybe_compact()
         return len(gids)
@@ -539,6 +564,8 @@ class StreamingIndex:
                                                   live_rows)
         self._n_base = n_live
         self._invalidate()
+        self._observe_mutation("compact", folded_delta_rows=folded,
+                               dropped_tombstones=dropped)
         return {"folded_delta_rows": folded, "dropped_tombstones": dropped,
                 "n_live": n_live}
 
@@ -562,6 +589,8 @@ class StreamingIndex:
         self._n_shards = n_shards
         stats["shard_loads"] = [int(self.base_len[m].sum()) for m in members]
         self._invalidate()
+        self._observe_mutation("rebalance", moved_rows=stats["moved_rows"],
+                               shard_loads=stats["shard_loads"])
         return stats
 
     def maybe_compact(self) -> dict | None:

@@ -37,6 +37,14 @@ class TierSpec:
     parallelism: float       # concurrent in-flight accesses (QD / banks)
     min_grain_B: int = 64    # minimum transfer granularity
 
+    def seconds(self, accesses: int, nbytes: int) -> float:
+        """Modeled time this tier spends serving ``accesses`` transfers
+        totalling ``nbytes`` under the max(lat, bw) overlap model (see
+        ``QueryCost.tier_seconds``).  Used both for ledger folding and
+        for per-level span attribution in the observability layer."""
+        lat = accesses * self.latency_s / self.parallelism
+        return max(lat, nbytes / self.bandwidth_Bps)
+
 
 TABLE_I = {
     Tier.DRAM: TierSpec(latency_s=150e-9, bandwidth_Bps=8 * 38.4e9,
@@ -93,10 +101,7 @@ class QueryCost:
 
     def _key_seconds(self, tier: Tier, t: "Traffic") -> float:
         """Time one stage key's traffic occupies a tier (see tier_seconds)."""
-        spec = self.model[tier]
-        lat = t.accesses * spec.latency_s / spec.parallelism
-        bw = t.bytes / spec.bandwidth_Bps
-        return max(lat, bw)
+        return self.model[tier].seconds(t.accesses, t.bytes)
 
     def add_compute(self, seconds: float) -> None:
         self.compute_s += seconds

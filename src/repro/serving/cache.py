@@ -51,6 +51,7 @@ import numpy as np
 
 from repro.core.packing import pack_ternary
 from repro.core.ternary import ternary_encode
+from repro.obs import trace
 
 
 @partial(jax.jit)
@@ -116,9 +117,11 @@ class ResultCache:
         entry = self._entries.get(key)
         if entry is None:
             self.stats.misses += 1
+            trace.event("cache.miss", track="cache", generation=generation)
             return None
         self._entries.move_to_end(key)
         self.stats.hits += 1
+        trace.event("cache.hit", track="cache", generation=generation)
         return entry
 
     def insert(self, qkey: bytes, plan, generation: int, ids, distances,
@@ -130,6 +133,7 @@ class ResultCache:
         while len(self._entries) >= self.capacity:
             self._entries.popitem(last=False)
             self.stats.evictions += 1
+            trace.event("cache.evict", track="cache")
         self._entries[key] = CacheEntry(
             ids=np.array(ids), distances=np.array(distances),
             degraded=degraded)
@@ -148,6 +152,23 @@ class ResultCache:
         for k in stale:
             del self._entries[k]
         self.stats.invalidations += len(stale)
+        if stale:
+            trace.event("cache.invalidate", track="cache",
+                        generation=generation, purged=len(stale))
+
+    def bind_metrics(self, registry) -> None:
+        """Mirror ``CacheStats`` + current size into ``registry`` as the
+        ``serving_cache{field=...}`` gauge family, refreshed at export
+        time (collector — the lookup/insert hot paths stay untouched)."""
+        g = registry.gauge("serving_cache", "result-cache counters",
+                           labelnames=("field",))
+
+        def _collect():
+            for name, v in self.stats.as_dict().items():
+                g.labels(field=name).set(v)
+            g.labels(field="size").set(len(self._entries))
+
+        registry.add_collector(_collect)
 
     def clear(self) -> None:
         self._entries.clear()

@@ -55,6 +55,7 @@ distances, and the summed ledger are bit-identical to sequential
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 from dataclasses import dataclass, field
@@ -65,6 +66,8 @@ import numpy as np
 from repro.anns.api import Database, QueryPlan
 from repro.anns.executor import bucket_for, pad_chunk
 from repro.memory.tiers import QueryCost, Tier
+from repro.obs import metrics as obs_metrics, trace
+from repro.obs.metrics import MetricsRegistry
 from repro.serving.cache import ResultCache, query_key
 
 __all__ = ["Request", "Response", "TenantQoS", "TokenBucket",
@@ -229,7 +232,7 @@ class ServingEngine:
                  cache: ResultCache | None = None,
                  batching: bool = True, overlap: bool = True,
                  dispatch_overhead_us: float = 50.0,
-                 mesh=None):
+                 mesh=None, tracer=None):
         self.db = index if isinstance(index, Database) else Database.wrap(index)
         if not batching:
             max_batch, max_wait_us = 1, 0.0
@@ -261,6 +264,45 @@ class ServingEngine:
         self._front_free_us = 0.0
         self._refine_free_us = 0.0
         self._busy_free_us = 0.0
+
+        # observability: a per-engine metrics registry (activated around
+        # ``run`` so executor-level series like fatrq_model_drift_ratio
+        # aggregate here, not in the process default) + an optional
+        # tracer whose virtual clock is wired to the engine's.
+        self.registry = MetricsRegistry()
+        self.tracer = tracer
+        if tracer is not None and tracer.virtual_clock is None:
+            tracer.virtual_clock = lambda: self.clock.now_us
+        self._m_requests = self.registry.counter(
+            "serving_requests_total", "requests admitted, by tenant",
+            labelnames=("tenant",))
+        self._m_throttled = self.registry.counter(
+            "serving_throttled_total",
+            "requests degraded by QoS throttling, by tenant",
+            labelnames=("tenant",))
+        self._m_queue_wait = self.registry.histogram(
+            "serving_queue_wait_us",
+            "virtual µs between admission and batch dispatch")
+        self._m_occupancy = self.registry.histogram(
+            "serving_batch_occupancy", "requests per dispatched batch",
+            buckets=(1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0))
+        self.registry.add_collector(self._mirror_stats)
+        if cache is not None:
+            cache.bind_metrics(self.registry)
+
+    def _mirror_stats(self) -> None:
+        """Export-time collector: ``ServingStats`` snapshot → the
+        ``serving_stats{field=...}`` gauge family."""
+        g = self.registry.gauge("serving_stats", "ServingStats snapshot",
+                                labelnames=("field",))
+        for name, v in self.stats.as_dict().items():
+            g.labels(field=name).set(v)
+
+    def metrics(self) -> dict:
+        """One flat ``{"name{labels}": value}`` dict unifying scheduler
+        counters, ServingStats, per-tenant throttling, cache stats, and
+        any datapath series recorded while ``run`` was active."""
+        return self.registry.flat()
 
     # -- QoS ---------------------------------------------------------------
 
@@ -296,9 +338,16 @@ class ServingEngine:
     def _admit(self, req: Request, responses: list) -> None:
         now = self.clock.now_us
         self.stats.requests += 1
+        self._m_requests.labels(tenant=req.tenant).inc()
         rk = req.k or self.base_plan.k
         bucket = self._bucket(req.tenant)
         degraded = bucket is not None and not bucket.peek(now)
+        trace.event("serve.admit", track="sched", rid=req.rid,
+                    tenant=req.tenant, k=rk, degraded=degraded)
+        if degraded:
+            self._m_throttled.labels(tenant=req.tenant).inc()
+            trace.event("serve.throttle", track="sched", rid=req.rid,
+                        tenant=req.tenant)
         plan = self._class_plan(rk, degraded)
         qkey = None
         if self.cache is not None:
@@ -308,6 +357,8 @@ class ServingEngine:
                 self.stats.cache_hits += 1
                 if degraded:
                     self.stats.degraded += 1
+                trace.event("serve.cache_hit", track="sched", rid=req.rid,
+                            tenant=req.tenant)
                 responses.append(Response(
                     rid=req.rid, tenant=req.tenant,
                     ids=entry.ids.copy(), distances=entry.distances.copy(),
@@ -353,6 +404,12 @@ class ServingEngine:
         now = self.clock.now_us
         self.batch_log.append((bid, now, tuple(a.rid for a in batch)))
         self.stats.batches += 1
+        self._m_occupancy.observe(len(batch))
+        for a in batch:
+            self._m_queue_wait.observe(now - a.admit_us)
+        trace.event("serve.dispatch", track="sched", bid=bid, k=rk,
+                    degraded=degraded, n=len(batch),
+                    rids=[a.rid for a in batch])
         cp = self.db.compiled(self._class_plan(rk, degraded), mesh=self.mesh)
         q = jnp.stack([jnp.asarray(a.req.query, jnp.float32) for a in batch])
         n = q.shape[0]
@@ -394,6 +451,7 @@ class ServingEngine:
         # this is the fixed cost the coalescer amortizes over the batch
         f_us = front_s * 1e6 + self.dispatch_overhead_us
         r_us = max(cost.total_seconds() - front_s, 0.0) * 1e6
+        tr = trace.active()
         if self.overlap and split:
             start_f = max(dispatch_us, self._front_free_us)
             front_done = start_f + f_us
@@ -401,10 +459,32 @@ class ServingEngine:
             start_r = max(front_done, self._refine_free_us)
             done = start_r + r_us
             self._refine_free_us = done
+            if tr is not None:
+                # the units' occupancy is known only now — spans are
+                # back-stamped with explicit virtual intervals
+                sp = tr.add_span("serve.batch", track="sched",
+                                 virtual_start_us=dispatch_us,
+                                 virtual_end_us=done, bid=bid, n=n,
+                                 degraded=degraded, split=True)
+                tr.add_span("serve.front", track="unit:front",
+                            virtual_start_us=start_f,
+                            virtual_end_us=front_done,
+                            parent=sp.sid, bid=bid)
+                tr.add_span("serve.refine", track="unit:refine",
+                            virtual_start_us=start_r, virtual_end_us=done,
+                            parent=sp.sid, bid=bid)
         else:
             start = max(dispatch_us, self._busy_free_us)
             done = start + f_us + r_us
             self._busy_free_us = done
+            if tr is not None:
+                sp = tr.add_span("serve.batch", track="sched",
+                                 virtual_start_us=dispatch_us,
+                                 virtual_end_us=done, bid=bid, n=n,
+                                 degraded=degraded, split=False)
+                tr.add_span("serve.dispatch.serial", track="unit:serial",
+                            virtual_start_us=start, virtual_end_us=done,
+                            parent=sp.sid, bid=bid)
         self.total_cost.merge(cost)
         ids = np.asarray(res.ids[:n])
         dists = np.asarray(res.distances[:n])
@@ -427,7 +507,18 @@ class ServingEngine:
         Discrete-event loop: the clock jumps between arrival instants and
         coalescer close deadlines — nothing happens between events, so
         the simulation is exact and deterministic.
+
+        The engine's metrics registry is active for the duration (and the
+        engine's tracer, when one was attached), so datapath series and
+        spans recorded deep in the executor land with the engine's own.
         """
+        with contextlib.ExitStack() as stack:
+            stack.enter_context(obs_metrics.use(self.registry))
+            if self.tracer is not None:
+                stack.enter_context(trace.use(self.tracer))
+            return self._run(requests)
+
+    def _run(self, requests: list) -> list:
         pending = sorted(
             requests,
             key=lambda r: (r.arrival_us,

@@ -18,6 +18,7 @@ import pytest
 
 from repro.anns import (Database, PipelineConfig, QueryPlan, StreamingConfig,
                         StreamingIndex, build, registry)
+from repro.obs import trace
 
 
 @pytest.fixture(scope="module")
@@ -119,6 +120,49 @@ def test_backend_parity_every_front_layout(ds, index_ml, streaming_ml,
     a, b = results["reference"], results["pallas"]
     assert jnp.array_equal(a.ids, b.ids)
     assert _ledger_dict(a.cost) == _ledger_dict(b.cost)
+
+
+# ledger stage-key prefix → the datapath stage span that billed it
+_STAGE_OF = {"coarse": "front", "front": "front", "handoff": "refine",
+             "refine": "refine", "delta": "refine", "rerank": "rerank"}
+
+
+@pytest.mark.parametrize("front,layout,backend", _triples())
+def test_ledger_span_coverage_every_triple(ds, index, streaming, front,
+                                           layout, backend):
+    """Observability invariant over the full matrix: with a tracer
+    active, every executed stage emitted ≥1 span AND ≥1 ledger entry,
+    and the two views map onto each other — a new ledger stage key
+    without a span (or a span that bills nothing) fails here.  Results
+    must be bit-identical to the untraced run."""
+    if layout == "streaming":
+        db, shards = Database.wrap(streaming), None
+    elif layout == "sharded":
+        db, shards = Database.wrap(index), 1
+    else:
+        db, shards = Database.wrap(index), None
+    plan = QueryPlan(front=front, backend=backend, shards=shards, k=5)
+    tr = trace.Tracer()
+    with trace.use(tr):
+        res = db.query(ds.queries, plan=plan)
+    span_names = {s.name for s in tr.spans}
+    stages_billed = set()
+    for key in res.cost.ledger:
+        stage = key.split(":", 1)[0]
+        assert stage in _STAGE_OF, f"unmapped ledger stage {key!r}"
+        stages_billed.add(_STAGE_OF[stage])
+    # every billed stage produced a span...
+    assert stages_billed <= span_names, (
+        f"ledger stages {sorted(stages_billed - span_names)} have no span")
+    # ...and every stage span billed the ledger
+    for stage in ("front", "refine", "rerank"):
+        if stage in span_names:
+            assert stage in stages_billed, f"{stage} span billed nothing"
+    assert {"front", "refine", "rerank"} <= span_names
+    untraced = db.query(ds.queries, plan=plan)
+    assert jnp.array_equal(untraced.ids, res.ids)
+    assert jnp.array_equal(untraced.distances, res.distances)
+    assert _ledger_dict(untraced.cost) == _ledger_dict(res.cost)
 
 
 def test_backend_parity_post_compact_streaming(ds):
