@@ -1,0 +1,126 @@
+"""Adaptive tiered-placement benchmark: heat-driven hot/cold migration
+under a seeded Zipfian trace vs uniform traffic.
+
+Replays the same query trace twice through a ``TieredIndex`` — once on
+the all-warm (static-equivalent) placement, once after
+``rebalance_tiers()`` promoted the hottest lists to HBM and demoted the
+coldest to SSD — for two traffic shapes:
+
+* ``uniform`` — the query pool spreads evenly over the IVF lists; there
+  is no head to promote, so adaptive placement buys little (and the cold
+  demotions can even cost: SSD's 4 KiB min-grain bills every stray probe
+  into a demoted list).
+* ``skewed``  — a seeded Zipfian trace (popularity ∝ rank^-1.3 over rows
+  ranked by distance to one anchor) concentrates probes on a handful of
+  lists; the policy moves that head into HBM and the modeled time drops.
+
+Every number is from the Table-I tier model over a seeded trace, so the
+records are exactly reproducible and gate hard in CI
+(``scripts/check_bench.py --bench tiered``), including the headline
+invariant ``tiered_skewed_policy < tiered_skewed_warm``.  Records carry
+no ``devices`` field on purpose: the tiered datapath is per-device, so
+both CI device legs must reproduce the SAME numbers against one
+baseline.
+
+Standalone: ``python benchmarks/bench_tiered.py [--queries N]``.  Writes
+``BENCH_bench_tiered.json``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+if __name__ == "__main__":          # must run BEFORE anything imports jax
+    import argparse
+    import os
+
+    _ap = argparse.ArgumentParser()
+    _ap.add_argument("--devices", type=int, default=None,
+                     help="fake this many host devices (the tiered bench "
+                          "is per-device; this only proves the numbers "
+                          "are device-count invariant)")
+    _ap.add_argument("--queries", type=int, default=64,
+                     help="queries per trace")
+    _CLI_ARGS = _ap.parse_args()
+    if _CLI_ARGS.devices and _CLI_ARGS.devices > 1 and \
+            "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={_CLI_ARGS.devices}"
+        ).strip()
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path[:0] = [os.path.join(_root, "src"), _root]
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, fatrq_index, write_json
+from repro.anns import (Database, QueryPlan, TieredConfig, TieredIndex,
+                        recall_at_k)
+from repro.data.synthetic import brute_force_topk
+
+_K = 10
+_POLICY = TieredConfig(decay=0.5, hot_rows_frac=0.25, cold_rows_frac=0.2)
+
+
+def _uniform_trace(ds, n: int) -> jnp.ndarray:
+    """Seeded uniform replay over the held-out query set."""
+    rng = np.random.default_rng(3)
+    pool = np.asarray(ds.queries)
+    return jnp.asarray(pool[rng.integers(0, pool.shape[0], size=n)])
+
+
+def _zipfian_trace(ds, n: int) -> jnp.ndarray:
+    """Seeded Zipfian replay: popularity ∝ rank^-1.3 over database rows
+    ranked by distance to one anchor, so the head lands on few lists."""
+    x = np.asarray(ds.x)
+    near = np.argsort(((x - x[0]) ** 2).sum(axis=1))
+    rng = np.random.default_rng(11)
+    p = 1.0 / np.arange(1, len(near) + 1, dtype=np.float64) ** 1.3
+    rows = near[rng.choice(len(near), size=n, p=p / p.sum())]
+    q = x[rows] + 0.02 * rng.standard_normal((n, x.shape[1]))
+    return jnp.asarray((q / np.linalg.norm(q, axis=1, keepdims=True))
+                       .astype(np.float32))
+
+
+def _replay(shape: str, ds, index, queries) -> None:
+    """One trace through all-warm then policy-on placement; two records."""
+    ti = TieredIndex(index, _POLICY)
+    db = Database.wrap(ti)
+    plan = QueryPlan(front="ivf", k=_K)
+    gt = brute_force_topk(ds.x, queries, _K)
+    nq = queries.shape[0]
+
+    warm = db.query(queries, plan=plan)       # all-warm pass builds heat
+    out = ti.rebalance_tiers()
+    policy = db.query(queries, plan=plan)
+
+    for name, res in (("warm", warm), ("policy", policy)):
+        occ = out["occupancy"] if name == "policy" else \
+            {"hot": (0, 0),
+             "warm": (ti.list_tier.shape[0], int(ti.list_rows.sum())),
+             "cold": (0, 0)}
+        total = res.cost.total_seconds()
+        emit(f"tiered_{shape}_{name}", total / nq * 1e6,
+             f"recall@{_K}={recall_at_k(res.ids, gt, _K):.3f};"
+             f"hot_rows={occ['hot'][1]};cold_rows={occ['cold'][1]}",
+             cost=res.cost, plan=res.plan,
+             recall_at_k=float(recall_at_k(res.ids, gt, _K)),
+             n_queries=int(nq),
+             hot_lists=occ["hot"][0], hot_rows=occ["hot"][1],
+             cold_lists=occ["cold"][0], cold_rows=occ["cold"][1],
+             generation=ti.generation)
+
+
+def run(*, devices: int | None = None, n_queries: int = 64) -> None:
+    del devices  # per-device datapath: records are device-count invariant
+    ds, index = fatrq_index()
+    _replay("uniform", ds, index, _uniform_trace(ds, n_queries))
+    _replay("skewed", ds, index, _zipfian_trace(ds, n_queries))
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run(devices=_CLI_ARGS.devices, n_queries=_CLI_ARGS.queries)
+    write_json("bench_tiered")

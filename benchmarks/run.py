@@ -16,13 +16,13 @@ def main() -> None:
     from benchmarks import (bench_arch_dims, bench_distortion,
                             bench_kernels, bench_refinement, bench_serving,
                             bench_storage, bench_streaming,
-                            bench_throughput, common)
+                            bench_throughput, bench_tiered, common)
 
     print("name,us_per_call,derived")
     failures = 0
     for mod in [bench_storage, bench_arch_dims, bench_kernels,
                 bench_distortion, bench_throughput, bench_refinement,
-                bench_streaming, bench_serving]:
+                bench_streaming, bench_tiered, bench_serving]:
         short = mod.__name__.rsplit(".", 1)[-1]
         try:
             mod.run()

@@ -8,6 +8,7 @@ import jax
 
 from repro.anns import Database, PipelineConfig, QueryPlan, recall_at_k
 from repro.data import make_dataset
+from repro.memory import Tier
 
 
 def main():
@@ -31,10 +32,8 @@ def main():
     base_rec = recall_at_k(base.ids, ds.gt, 10)
 
     cost, base_cost = res.cost, base.cost
-    ssd = sum(t.accesses for k, t in cost.ledger.items()
-              if k.endswith("ssd"))
-    ssd_b = sum(t.accesses for k, t in base_cost.ledger.items()
-                if k.endswith("ssd"))
+    ssd = cost.by_tier()[Tier.SSD].accesses
+    ssd_b = base_cost.by_tier()[Tier.SSD].accesses
     print(f"\n  recall@10: FaTRQ={rec:.3f}  baseline={base_rec:.3f}")
     print(f"  SSD fetches/query: FaTRQ={ssd / 64:.1f}  "
           f"baseline={ssd_b / 64:.1f}  ({ssd_b / max(ssd, 1):.1f}x fewer)")

@@ -17,6 +17,12 @@ what is actually comparable across machines:
   runner, not comparable across machines; the gate only checks that
   every baseline record name is still produced (a vanished record means
   a bench regressed into not running).
+* ``--bench tiered`` — tiered-placement numbers are modeled like the
+  serving bench's and gate the same way, PLUS the headline invariant
+  from the fresh run: ``tiered_skewed_policy`` must model strictly
+  cheaper than ``tiered_skewed_warm``.  Tiered records carry no
+  ``devices`` field — the datapath is per-device, so every CI leg must
+  reproduce one baseline.
 
 The baseline is read from ``git show HEAD:<file>`` so a smoke step that
 overwrote the workspace copy (bench scripts write in place) cannot
@@ -37,10 +43,13 @@ import sys
 
 SERVING_FILE = "BENCH_bench_serving.json"
 KERNELS_FILE = "BENCH_bench_kernels.json"
+TIERED_FILE = "BENCH_bench_tiered.json"
 
 # (metric, higher_is_worse) — every one a virtual-clock/modeled number
 SERVING_METRICS = (("us_per_call", True), ("p99_us", True),
                    ("cost_total_s", True), ("qps_sustained", False))
+TIERED_METRICS = (("us_per_call", True), ("cost_total_s", True),
+                  ("recall_at_k", False))
 
 
 def load_baseline(path: str) -> dict:
@@ -67,7 +76,8 @@ def _key(rec: dict) -> tuple:
 
 
 def check_serving(baseline: dict, fresh: dict, *, tolerance: float,
-                  allow_empty: bool) -> list[str]:
+                  allow_empty: bool,
+                  metrics: tuple = SERVING_METRICS) -> list[str]:
     fresh_by_key = {_key(r): r for r in fresh["records"]}
     failures: list[str] = []
     compared = 0
@@ -75,7 +85,7 @@ def check_serving(baseline: dict, fresh: dict, *, tolerance: float,
         new = fresh_by_key.get(_key(base))
         if new is None:
             continue          # other CI leg's device count
-        for metric, higher_worse in SERVING_METRICS:
+        for metric, higher_worse in metrics:
             if metric not in base or metric not in new:
                 continue
             b, f = float(base[metric]), float(new[metric])
@@ -99,6 +109,39 @@ def check_serving(baseline: dict, fresh: dict, *, tolerance: float,
     return failures
 
 
+def check_tiered(baseline: dict, fresh: dict, *, tolerance: float,
+                 allow_empty: bool) -> list[str]:
+    """Tiered-placement gate: modeled metrics compare against baseline
+    (they are Table-I numbers over a seeded trace, so they gate hard),
+    every baseline record must still be produced (tiered records carry no
+    device field — both CI legs reproduce the same numbers), and the
+    headline invariant must hold in the FRESH records: under the Zipfian
+    trace, the policy-on placement is strictly cheaper than all-warm."""
+    failures = check_serving(
+        baseline, fresh, tolerance=tolerance, allow_empty=allow_empty,
+        metrics=TIERED_METRICS)
+    fresh_by_name = {r["name"]: r for r in fresh["records"]}
+    for name in sorted(r["name"] for r in baseline["records"]):
+        if name not in fresh_by_name:
+            failures.append(f"tiered record vanished: {name}")
+            print(f"FAIL  tiered record vanished: {name}")
+    warm = fresh_by_name.get("tiered_skewed_warm")
+    policy = fresh_by_name.get("tiered_skewed_policy")
+    if warm and policy:
+        w, p = float(warm["cost_total_s"]), float(policy["cost_total_s"])
+        line = (f"invariant skewed policy < warm: {p:.6g} vs {w:.6g} "
+                f"({1 - p / w:+.1%} saved)")
+        if p < w:
+            print(f"ok    {line}")
+        else:
+            failures.append(line)
+            print(f"FAIL  {line}")
+    elif not allow_empty:
+        failures.append("tiered_skewed_{warm,policy} records missing — "
+                        "invariant checked nothing")
+    return failures
+
+
 def check_kernels(baseline: dict, fresh: dict, *, allow_empty: bool
                   ) -> list[str]:
     base_names = {r["name"] for r in baseline["records"]}
@@ -113,7 +156,7 @@ def check_kernels(baseline: dict, fresh: dict, *, allow_empty: bool
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--bench", choices=("serving", "kernels"),
+    ap.add_argument("--bench", choices=("serving", "kernels", "tiered"),
                     required=True)
     ap.add_argument("--fresh", default=None,
                     help="freshly generated record file (default: the "
@@ -128,13 +171,17 @@ def main(argv=None) -> int:
                     help="do not fail when nothing was comparable")
     args = ap.parse_args(argv)
 
-    default = SERVING_FILE if args.bench == "serving" else KERNELS_FILE
+    default = {"serving": SERVING_FILE, "kernels": KERNELS_FILE,
+               "tiered": TIERED_FILE}[args.bench]
     fresh = load_fresh(args.fresh or default)
     baseline = load_baseline(args.baseline or default)
 
     if args.bench == "serving":
         failures = check_serving(baseline, fresh, tolerance=args.tolerance,
                                  allow_empty=args.allow_empty)
+    elif args.bench == "tiered":
+        failures = check_tiered(baseline, fresh, tolerance=args.tolerance,
+                                allow_empty=args.allow_empty)
     else:
         failures = check_kernels(baseline, fresh,
                                  allow_empty=args.allow_empty)

@@ -28,15 +28,22 @@ Layers, bottom-up:
   (delta traffic on a distinct ``delta:cxl`` entry), and drift-triggered
   ``compact()`` / ``rebalance()`` through the same LPT partitioner the
   sharded subsystem uses.
+* ``tiered`` — adaptive placement: ``TieredIndex`` wraps a static index
+  with heat-driven hot/warm/cold list placement (``memory.placement``).
+  Hot lists score exactly from HBM and skip refinement (``hot:hbm``),
+  warm lists run the normal TRQ path, cold lists' residual stream bills
+  at SSD rates (``cold:ssd``); ``rebalance_tiers()`` migrates placement
+  and bumps the generation so executor + result caches invalidate.
 * ``registry`` — the capability registry: every front stage and refine
-  backend declares the index layouts (static / sharded / streaming) it
-  supports via ``register_front`` / ``register_backend``; unsupported
-  combinations raise ``PlanError`` at plan time.
+  backend declares the index layouts (static / sharded / streaming /
+  tiered) it supports via ``register_front`` / ``register_backend``;
+  unsupported combinations raise ``PlanError`` at plan time.
 * ``api`` — the unified query surface: ``Database`` (one handle over
-  ``FaTRQIndex`` / ``ShardedIndex`` / ``StreamingIndex``), ``QueryPlan``
-  (frozen plan, validated once, compiled once into an executor cached per
-  (index generation, plan)), and ``SearchResult`` (ids + exact distances
-  + QueryCost + the resolved plan).
+  ``FaTRQIndex`` / ``ShardedIndex`` / ``StreamingIndex`` /
+  ``TieredIndex``), ``QueryPlan`` (frozen plan, validated once, compiled
+  once into an executor cached per (index generation, plan)), and
+  ``SearchResult`` (ids + exact distances + QueryCost + the resolved
+  plan).
 * ``pipeline`` — the stable facade: ``build`` (offline index build) and
   ``search(..., front=, backend=, shards=)`` / ``baseline_search`` /
   ``recall_at_k`` — thin shims over ``api.Database``, kept bit-identical
@@ -55,6 +62,8 @@ from repro.anns.stages import (Candidates, FrontStage, GraphFrontStage,
                                IVFFrontStage, PallasRefineBackend, Refined,
                                RefineBackend, ReferenceRefineBackend)
 from repro.anns.streaming import StreamingConfig, StreamingIndex
+from repro.anns.tiered import TieredFrontStage, TieredIndex
+from repro.memory.placement import TieredConfig
 
 __all__ = ["FaTRQIndex", "PipelineConfig", "baseline_search", "build",
            "recall_at_k", "search",
@@ -65,6 +74,7 @@ __all__ = ["FaTRQIndex", "PipelineConfig", "baseline_search", "build",
            "ShardedExecutor", "ShardedIndex", "make_sharded_executor",
            "partition_database",
            "StreamingConfig", "StreamingIndex",
+           "TieredConfig", "TieredFrontStage", "TieredIndex",
            "Candidates", "Refined", "FrontStage", "RefineBackend",
            "IVFFrontStage", "GraphFrontStage",
            "ReferenceRefineBackend", "PallasRefineBackend"]

@@ -10,7 +10,8 @@ layouts" shape COSMOS and AiSAQ expose over their CXL / all-in-storage
 backends:
 
 * ``Database`` — a uniform handle over ``FaTRQIndex`` (static),
-  ``ShardedIndex`` (mesh-partitioned) and ``StreamingIndex`` (mutable).
+  ``ShardedIndex`` (mesh-partitioned), ``StreamingIndex`` (mutable) and
+  ``TieredIndex`` (heat-driven hot/warm/cold placement).
   ``Database.build(key, x, config)`` builds a static index;
   ``Database.wrap(index)`` adopts an existing one (cached on the index
   instance, so facade callers share one handle and its executor cache).
@@ -56,6 +57,7 @@ from repro.anns.registry import PlanError
 from repro.anns.sharding import ShardedExecutor, ShardedIndex, \
     make_sharded_executor
 from repro.anns.streaming import StreamingIndex
+from repro.anns.tiered import TieredIndex
 from repro.memory import QueryCost
 from repro.obs import trace
 
@@ -176,6 +178,8 @@ class CompiledPlan:
 
 
 def _layout_of(index) -> str:
+    if isinstance(index, TieredIndex):
+        return "tiered"
     if isinstance(index, StreamingIndex):
         return "streaming"
     if isinstance(index, ShardedIndex):
@@ -183,7 +187,8 @@ def _layout_of(index) -> str:
     if isinstance(index, FaTRQIndex):
         return "static"
     raise TypeError(f"cannot wrap {type(index).__name__}: expected "
-                    f"FaTRQIndex, ShardedIndex or StreamingIndex")
+                    f"FaTRQIndex, ShardedIndex, StreamingIndex or "
+                    f"TieredIndex")
 
 
 class Database:
@@ -274,6 +279,13 @@ class Database:
         elif p.mode != "fatrq":
             raise PlanError(f"unknown search mode {p.mode!r}; expected "
                             f"'fatrq' or 'baseline'")
+        if self.layout == "tiered" and p.shards is not None:
+            raise PlanError(
+                f"unsupported plan: shards={p.shards} cannot run on the "
+                f"'tiered' index layout — heat-driven placement is "
+                f"per-device; partition the wrapped static index "
+                f"(Database.wrap(tiered.inner)) and re-apply tiering per "
+                f"shard instead")
         if self.layout == "sharded":
             if p.shards not in (None, self.index.n_shards):
                 raise PlanError(
@@ -355,6 +367,13 @@ class Database:
             ex = ShardedExecutor(sharded=self.index, backend=rp.backend,
                                  micro_batch=rp.micro_batch,
                                  refine_budget=rp.refine_budget)
+            entry = (ex, None)
+        elif self.layout == "tiered":
+            ex = make_executor(self.index, front=rp.front,
+                               backend=rp.backend,
+                               micro_batch=rp.micro_batch,
+                               refine_budget=rp.refine_budget,
+                               layout="tiered")
             entry = (ex, None)
         elif rp.shards is not None:
             ex = make_sharded_executor(

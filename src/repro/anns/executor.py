@@ -22,12 +22,14 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.anns import registry, stages as stages_mod
 from repro.anns.stages import (Counters, FrontStage, RefineBackend,
                                graph_for as _graph_for)  # noqa: F401 - compat
 from repro.index import graph as graph_mod
 from repro.memory import QueryCost, Tier
+from repro.memory.placement import TIER_COLD, TIER_HOT
 from repro.obs import metrics, trace
 
 # import-time snapshots of the capability registry, kept as module
@@ -102,10 +104,15 @@ def pad_chunk(chunk: jax.Array, bucket: int
     return jnp.concatenate([chunk, pad], axis=0), qvalid
 
 
-def _collect(counters: Counters) -> dict[str, int]:
-    """The single device→host transfer of a search call."""
-    return {n: int(v) for n, v in
-            zip(counters, jax.device_get(list(counters.values())))}
+def _collect(counters: Counters) -> dict:
+    """The single device→host transfer of a search call.  Scalar counters
+    come back as Python ints; vector counters (the tiered layout's
+    per-list ``list_heat`` histogram) as numpy arrays."""
+    out = {}
+    for n, v in zip(counters, jax.device_get(list(counters.values()))):
+        a = np.asarray(v)
+        out[n] = int(a) if a.ndim == 0 else a
+    return out
 
 
 def _cat(parts: list[jax.Array]) -> jax.Array:
@@ -130,10 +137,11 @@ class SearchExecutor:
                    micro_batch: int | None = None,
                    refine_budget: int | None = None,
                    graph_index: graph_mod.GraphIndex | None = None,
+                   layout: str = "static",
                    **front_opts) -> "SearchExecutor":
         if graph_index is not None:
             front_opts["graph_index"] = graph_index
-        fs = registry.make_front(front, "static", index, **front_opts)
+        fs = registry.make_front(front, layout, index, **front_opts)
         be = registry.make_backend(backend)
         return cls(index=index, front=fs, backend=be,
                    micro_batch=micro_batch, refine_budget=refine_budget)
@@ -158,16 +166,39 @@ class SearchExecutor:
         single-transfer path and bit-identical results."""
         cfg = self.index.config
         tr = trace.active()
+        hot = cold = None
+        rcand = cand
+        if cand.tier is not None:
+            # tiered layout: hot candidates detour to exact HBM scoring
+            # (masked OUT of refinement), cold candidates ride the normal
+            # refine path but are marked so their residual stream re-bills
+            # at SSD rates via the is_delta per-level split.  With every
+            # row warm both masks are all-False and each op below is an
+            # identity — bit-identical to the static layout.
+            hot = cand.valid & (cand.tier == TIER_HOT)
+            cold = cand.valid & (cand.tier == TIER_COLD)
+            rcand = cand._replace(valid=cand.valid & ~hot,
+                                  d0=jnp.where(hot, jnp.inf, cand.d0),
+                                  is_delta=cold, tier=None)
         with trace.span("refine", track="query",
                         backend=self.backend.name) as sp_refine:
-            refined = self.backend.refine(chunk, cand, self.index.trq,
+            refined = self.backend.refine(chunk, rcand, self.index.trq,
                                           k=k, bound=cfg.bound, z=cfg.z)
             if tr is not None:
                 jax.block_until_ready(refined.est)
         with trace.span("rerank", track="query", budget=budget) as sp_rerank:
-            topk, topk_d, n_ssd = stages_mod._rerank_survivors(
-                self.index.x, chunk, cand.ids, refined.est, refined.alive,
-                k=k, budget=budget)
+            if hot is not None:
+                d_hot = stages_mod._score_hot(self.index.x, chunk, cand.ids,
+                                              hot)
+                est = jnp.where(hot, d_hot, refined.est)
+                alive = refined.alive | hot
+                topk, topk_d, n_ssd, _ = stages_mod._rerank_survivors_tiered(
+                    self.index.x, chunk, cand.ids, est, alive, hot,
+                    k=k, budget=budget)
+            else:
+                topk, topk_d, n_ssd = stages_mod._rerank_survivors(
+                    self.index.x, chunk, cand.ids, refined.est,
+                    refined.alive, k=k, budget=budget)
             if tr is not None:
                 jax.block_until_ready(topk)
         counters = dict(cand.counters)
@@ -402,8 +433,16 @@ class SearchExecutor:
     # -- cost folding -----------------------------------------------------
 
     def _fold(self, counters: Counters, cost: QueryCost | None) -> QueryCost:
-        """One host transfer: device counters → Table-I traffic ledger."""
+        """One host transfer: device counters → Table-I traffic ledger.
+        The tiered layout's per-list access histogram rides the same
+        transfer and feeds the index's heat tracker here — heat tracking
+        costs no extra device round-trips."""
         counts = _collect(counters)
+        heat = counts.pop("list_heat", None)
+        if heat is not None:
+            observe = getattr(self.index, "observe_heat", None)
+            if observe is not None:
+                observe(heat)
         return fold_counts(counts, cost=cost, config=self.index.config,
                            layout=self.index.layout,
                            front_fold=self.front.fold_cost)
@@ -434,10 +473,23 @@ def fold_counts(counts: dict[str, int], *, cost: QueryCost | None, config,
     cost = cost or QueryCost()
     n_cand = counts["front_cand"]
     n_alive = counts["refine_alive"]
+    # tiered layout (anns.tiered): hot candidates score exactly against
+    # HBM-resident full vectors and never touch far memory; cold
+    # candidates' residual stream re-bills at SSD rates.  The tiered
+    # front ALWAYS emits both counters (zero-valued when all-warm), and
+    # no other front emits them — "tiered" and "streaming" marking are
+    # mutually exclusive, so the per-level marked share below is
+    # unambiguous.
+    tiered = "cold_cand" in counts
+    n_hot = counts.get("hot_cand", 0)
+    n_cold = counts.get("cold_cand", 0)
 
     front_fold(cost, counts, layout)
-    # front → refine handoff: 4 B coarse distance per candidate (§IV)
-    cost.record("handoff", Tier.CXL, n_cand, 4)
+    # front → refine handoff: 4 B coarse distance per candidate (§IV);
+    # hot candidates stay on device, so nothing crosses for them
+    cost.record("handoff", Tier.CXL, n_cand - n_hot, 4)
+    if n_hot:
+        cost.record("hot", Tier.HBM, n_hot, layout.ssd_bytes)
     # level-0 codes stream from far memory for ALL candidates; level
     # ℓ ≥ 1 only for survivors of level ℓ−1.  The backends emit the
     # actual per-level entering counts (``refine_alive_l{ℓ}``); the
@@ -452,16 +504,25 @@ def fold_counts(counts: dict[str, int], *, cost: QueryCost | None, config,
     # ``delta_cand`` (all candidates), levels ℓ ≥ 1 via the per-level
     # delta survivor counters (``refine_alive_l{ℓ}_delta``) both refine
     # backends emit whenever the front marks delta candidates.
+    # On the tiered layout the refine backends see cold candidates via the
+    # SAME is_delta marking mechanism, so ``refine_alive_l{ℓ}_delta`` is
+    # the cold-entering share there and re-bills to ``cold:ssd``.
     n_delta = counts.get("delta_cand", 0)
-    cost.record("refine", Tier.CXL, n_cand - n_delta, layout.far_bytes)
+    cost.record("refine", Tier.CXL, n_cand - n_delta - n_hot - n_cold,
+                layout.far_bytes)
     if n_delta:
         cost.record("delta", Tier.CXL, n_delta, layout.far_bytes)
+    if n_cold:
+        cost.record("cold", Tier.SSD, n_cold, layout.far_bytes)
     for lv in range(1, config.trq_levels):
         n_lv = counts.get(f"refine_alive_l{lv}", n_alive)
-        n_lv_delta = counts.get(f"refine_alive_l{lv}_delta", 0)
-        cost.record("refine", Tier.CXL, n_lv - n_lv_delta, layout.far_bytes)
-        if n_lv_delta:
-            cost.record("delta", Tier.CXL, n_lv_delta, layout.far_bytes)
+        n_lv_mark = counts.get(f"refine_alive_l{lv}_delta", 0)
+        cost.record("refine", Tier.CXL, n_lv - n_lv_mark, layout.far_bytes)
+        if n_lv_mark:
+            if tiered:
+                cost.record("cold", Tier.SSD, n_lv_mark, layout.far_bytes)
+            else:
+                cost.record("delta", Tier.CXL, n_lv_mark, layout.far_bytes)
     # survivors (≤ budget per query) hit SSD
     cost.record("rerank", Tier.SSD, counts["ssd_fetch"], layout.ssd_bytes)
     cost.add_compute(_COMPUTE_S_PER_CAND * n_cand)
@@ -478,16 +539,21 @@ def fold_counts(counts: dict[str, int], *, cost: QueryCost | None, config,
 
 def make_executor(index, *, front: str = "ivf", backend: str = "reference",
                   micro_batch: int | None = None,
-                  refine_budget: int | None = None, **front_opts
-                  ) -> SearchExecutor:
+                  refine_budget: int | None = None, layout: str = "static",
+                  **front_opts) -> SearchExecutor:
     """Memoized executor factory — facade entry point.
 
-    Executors are cached per (index, front, backend, micro_batch,
-    refine_budget) so the compatibility wrappers in ``anns.pipeline`` and
-    the serving layer can call this on every request without rebuilding
-    stages.
+    Executors are cached per (generation, front, backend, micro_batch,
+    refine_budget, layout) so the compatibility wrappers in
+    ``anns.pipeline`` and the serving layer can call this on every request
+    without rebuilding stages.  The generation component makes migration
+    visible: after a ``TieredIndex.rebalance_tiers()`` the old executors'
+    front stages hold superseded placement arrays, so stale-generation
+    entries are pruned and a fresh executor is built (static indexes have
+    no generation and keep the behavior they always had).
     """
-    key = (front, backend, micro_batch, refine_budget,
+    gen = getattr(index, "generation", 0)
+    key = (gen, front, backend, micro_batch, refine_budget, layout,
            tuple(sorted(front_opts.items())))
     cache = getattr(index, "_executor_cache", None)
     if cache is None:
@@ -498,6 +564,8 @@ def make_executor(index, *, front: str = "ivf", backend: str = "reference",
         ex = SearchExecutor.from_index(index, front=front, backend=backend,
                                        micro_batch=micro_batch,
                                        refine_budget=refine_budget,
-                                       **front_opts)
+                                       layout=layout, **front_opts)
+        for kk in [kk for kk in cache if kk[0] != gen]:
+            del cache[kk]
         cache[key] = ex
     return ex

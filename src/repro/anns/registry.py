@@ -4,10 +4,12 @@ One logical index, many physical layouts: a search request names a *front*
 stage (candidate generation), a *refine backend* (FaTRQ estimation
 datapath), and runs against an index *layout* ("static" ``FaTRQIndex``,
 "sharded" ``ShardedIndex`` on a device mesh, "streaming"
-``StreamingIndex`` with delta lists).  The built-in matrix is CLOSED: both
-fronts (IVF and graph) run on all three layouts — the graph front gets a
-halo-partitioned sharded traversal from ``anns.sharding`` and online edge
-insertion from ``anns.streaming``/``index.graph``.  Before this layer each
+``StreamingIndex`` with delta lists, "tiered" ``TieredIndex`` with
+heat-driven hot/warm/cold placement).  The built-in matrix is CLOSED:
+both fronts (IVF and graph) run on all four layouts — the graph front
+gets a halo-partitioned sharded traversal from ``anns.sharding``, online
+edge insertion from ``anns.streaming``/``index.graph``, and a
+tier-annotating wrapper from ``anns.tiered``.  Before this layer each
 entry point re-derived the support matrix with its own
 ``isinstance``/string if-chains and a triplicated "IVF front only" error
 string.
@@ -43,7 +45,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable
 
-LAYOUTS = ("static", "sharded", "streaming")
+LAYOUTS = ("static", "sharded", "streaming", "tiered")
 
 
 class PlanError(ValueError):

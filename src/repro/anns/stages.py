@@ -60,6 +60,12 @@ class Candidates(NamedTuple):
     ``is_delta`` marks candidates living in delta spill pages (streaming
     fronts populate it; static/sharded fronts leave it ``None``) so the
     refine backends can split per-level survivor traffic for the ledger.
+
+    ``tier`` carries per-candidate placement codes (``memory.placement``
+    TIER_* values) on the tiered layout; every other front leaves it
+    ``None``.  The executor — not the refine backends — consumes it: hot
+    candidates detour to exact HBM scoring, cold candidates' residual
+    stream is re-billed at SSD rates via ``is_delta``-style marking.
     """
 
     ids: jax.Array        # (Q, C) int32, clamped ≥ 0
@@ -67,6 +73,7 @@ class Candidates(NamedTuple):
     d0: jax.Array         # (Q, C) f32 coarse ADC distance, +inf if invalid
     counters: Counters
     is_delta: jax.Array | None = None   # (Q, C) bool, or None
+    tier: jax.Array | None = None       # (Q, C) int8 TIER_* codes, or None
 
 
 class Refined(NamedTuple):
@@ -426,6 +433,36 @@ def _rerank_survivors(x, queries, ids, est, alive, *, k: int, budget: int):
     return topk, -neg_d, jnp.sum(fetch_alive)
 
 
+@jax.jit
+def _score_hot(x, queries, ids, hot):
+    """Exact squared-L2 for hot (HBM-resident) candidates, +inf elsewhere.
+    The tiered layout's direct scoring path: full-precision rows of hot
+    lists never left fast memory, so reading them costs HBM rates and the
+    refinement cascade is skipped entirely for these candidates."""
+    d = jnp.sum((x[ids] - queries[:, None, :]) ** 2, axis=-1)
+    return jnp.where(hot, d, jnp.inf)
+
+
+@partial(jax.jit, static_argnames=("k", "budget"))
+def _rerank_survivors_tiered(x, queries, ids, est, alive, hot, *, k: int,
+                             budget: int):
+    """``_rerank_survivors`` for the tiered layout: identical ids and
+    distances, but hot candidates' full vectors are already HBM-resident —
+    their fetches must not bill to the SSD rerank counter.  Returns
+    (topk_ids, topk_dists, n_ssd, n_hot_fetch)."""
+    est_m = jnp.where(alive, est, jnp.inf)
+    _, order = jax.lax.top_k(-est_m, budget)
+    fetch_ids = jnp.take_along_axis(ids, order, axis=1)
+    fetch_alive = jnp.take_along_axis(alive, order, axis=1)
+    fetch_hot = jnp.take_along_axis(hot, order, axis=1) & fetch_alive
+    d = jnp.sum((x[fetch_ids] - queries[:, None, :]) ** 2, axis=-1)
+    d = jnp.where(fetch_alive, d, jnp.inf)
+    neg_d, best = jax.lax.top_k(-d, k)
+    topk = jnp.take_along_axis(fetch_ids, best, axis=1)
+    return (topk, -neg_d, jnp.sum(fetch_alive & ~fetch_hot),
+            jnp.sum(fetch_hot))
+
+
 @partial(jax.jit, static_argnames=("k",))
 def _rerank_all(x, queries, ids, valid, *, k: int):
     """Baseline rerank: exact L2 over the whole candidate list (no refine).
@@ -439,8 +476,9 @@ def _rerank_all(x, queries, ids, valid, *, k: int):
 # ----------------------------------------------- front factories + registry
 # Each front registers itself with the capability registry: supported index
 # layouts plus a per-layout stage factory.  ``anns.streaming`` attaches the
-# "streaming" factories (base ∪ delta IVF, tombstone-aware graph) when it
-# is imported; the "sharded" layout inlines its fronts in the shard_map
+# "streaming" factories (base ∪ delta IVF, tombstone-aware graph) and
+# ``anns.tiered`` the "tiered" ones (tier-annotating wrappers) when they
+# are imported; the "sharded" layout inlines its fronts in the shard_map
 # body via ``registry.ShardedFrontHooks`` (``anns.sharding`` registers the
 # whole-list LPT partitioner for IVF and the vector-range + halo
 # partitioner for graph), so both fronts declare it here but register no
@@ -480,9 +518,11 @@ def make_graph_front(index, *, graph_index=None, degree: int = 16,
                            pq_codes=index.pq_codes, **opts)
 
 
-registry.register_front("ivf", layouts=("static", "sharded", "streaming"),
+registry.register_front("ivf",
+                        layouts=("static", "sharded", "streaming", "tiered"),
                         make={"static": make_ivf_front})
-registry.register_front("graph", layouts=("static", "sharded", "streaming"),
+registry.register_front("graph",
+                        layouts=("static", "sharded", "streaming", "tiered"),
                         make={"static": make_graph_front})
 registry.register_backend("reference", make=ReferenceRefineBackend)
 registry.register_backend("pallas", make=PallasRefineBackend)

@@ -1,0 +1,262 @@
+"""Tiered index layout: heat-driven hot/warm/cold placement over a static
+FaTRQ index (the paper's tiered-memory story turned adaptive).
+
+``TieredIndex`` wraps an immutable ``FaTRQIndex`` with a per-list placement
+array driven by ``memory.placement``:
+
+  hot   lists' rows live fully in HBM — the executor scores them exactly
+        against the full-precision vectors and SKIPS progressive
+        refinement for them (billed ``hot:hbm``),
+  warm  lists run today's fused TRQ path unchanged (``refine:cxl``),
+  cold  lists' residual stream — level 0 and every deeper level — is
+        demoted to SSD rates (``cold:ssd``).
+
+The datapath split happens per CANDIDATE, not per query: the
+``TieredFrontStage`` wrapper annotates the inner front's candidate batch
+with per-row tier codes (one device gather) plus a per-list access
+counter, and the executor routes on the codes (``executor._refine_rerank``
+/ ``fold_counts``).  With every list WARM — the initial placement, and the
+forced placement when ``TieredConfig(enabled=False)`` — the annotations
+are all-identity and the tiered layout is bit-identical to the static
+layout: same ids, same distances, same ledger.
+
+Heat flows back without extra work: the executor's one counter transfer
+per search already carries the per-list candidate counts (``list_heat``),
+which ``TieredIndex.observe_heat`` folds into an EMA ``HeatTracker``.
+Migration is EXPLICIT — ``rebalance_tiers()`` re-plans placement against
+the occupancy budgets and, exactly like the streaming index's
+``compact()``/``rebalance()``, bumps the index generation and fires the
+generation hooks so the plan-keyed executor cache (``make_executor``) and
+the serving result cache (``serving.cache.ResultCache``) invalidate.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.anns import registry
+from repro.anns.pipeline import FaTRQIndex
+from repro.anns.stages import (Candidates, Counters, make_graph_front,
+                               make_ivf_front)
+from repro.memory import QueryCost, RecordLayout
+from repro.memory.placement import (TIER_COLD, TIER_HOT, TIER_WARM,
+                                    HeatTracker, TieredConfig, occupancy,
+                                    plan_migration, plan_placement)
+from repro.obs import metrics as obs_metrics, trace
+
+
+class TieredIndex:
+    """A static FaTRQ index + per-list hot/warm/cold placement.
+
+    Quacks like ``FaTRQIndex`` (``config``/``codebook``/``pq_codes``/
+    ``ivf``/``trq``/``x``/``layout`` are the wrapped index's own arrays —
+    placement never copies or re-encodes rows), and like
+    ``StreamingIndex`` for the invalidation surface (``generation``,
+    ``add_generation_hook``).
+    """
+
+    def __init__(self, index: FaTRQIndex,
+                 tiered: TieredConfig | None = None):
+        self.inner = index
+        self.tiered = tiered if tiered is not None else TieredConfig()
+        self.config = index.config
+        self.codebook = index.codebook
+        self.pq_codes = index.pq_codes
+        self.ivf = index.ivf
+        self.trq = index.trq
+        self.x = index.x
+        self.layout: RecordLayout = index.layout
+
+        nlist = int(self.config.nlist)
+        lists = np.asarray(index.ivf.lists)
+        cap = lists.shape[1]
+        n_rows = int(index.x.shape[0])
+        # row → owning IVF list (vectorized inverse of the list table)
+        rl = np.zeros(n_rows, np.int32)
+        li_idx = np.repeat(np.arange(nlist, dtype=np.int32), cap)
+        flat = lists.ravel()
+        m = flat >= 0
+        rl[flat[m]] = li_idx[m]
+        self.row_list = rl
+        self.list_rows = np.asarray(index.ivf.list_len, np.int64).copy()
+        self.list_tier = np.full(nlist, TIER_WARM, np.int8)  # all-warm start
+        self.heat = HeatTracker(nlist, decay=self.tiered.decay)
+        self.generation = 0
+        self._gen_hooks: list = []
+        self._dev_cache: dict | None = None
+
+    # ----------------------------------------------------- heat + migration
+
+    def observe_heat(self, counts) -> None:
+        """Fold one search batch's per-list candidate counts (the
+        ``list_heat`` counter the executor pops out of ``fold_counts``)
+        into the EMA tracker.  Deterministic given the query trace."""
+        self.heat.observe(np.asarray(counts))
+
+    def rebalance_tiers(self, *, force: bool = False) -> dict:
+        """Re-plan placement against the occupancy budgets and migrate.
+
+        Returns a report ``{"changed", "moves", "occupancy",
+        "generation"}``.  The generation bumps ONLY when the placement
+        actually changed — an unchanged plan must not evict warm executor
+        caches or serving result-cache entries.  ``force`` overrides the
+        ``min_observations`` gate, not the no-change short-circuit.
+        """
+        if not force and self.heat.observations < self.tiered.min_observations:
+            return {"changed": False, "moves": {},
+                    "occupancy": occupancy(self.list_tier, self.list_rows),
+                    "generation": self.generation}
+        new = plan_placement(self.heat.heat, self.list_rows, self.tiered)
+        moves = plan_migration(self.list_tier, new, self.list_rows)
+        changed = bool(moves)
+        if changed:
+            self.list_tier = new
+            self._invalidate()
+        occ = occupancy(self.list_tier, self.list_rows)
+        self._observe_rebalance(moves, occ)
+        return {"changed": changed, "moves": moves, "occupancy": occ,
+                "generation": self.generation}
+
+    # ------------------------------------------------- generation surface
+
+    def add_generation_hook(self, fn) -> None:
+        """Register ``fn(index, generation)`` to fire after every
+        placement migration — same contract as
+        ``StreamingIndex.add_generation_hook`` (the serving result cache
+        attaches here)."""
+        self._gen_hooks.append(fn)
+
+    def _invalidate(self) -> None:
+        self.generation += 1
+        self._dev_cache = None
+        for fn in list(self._gen_hooks):
+            fn(self, self.generation)
+
+    def _observe_rebalance(self, moves: dict, occ: dict) -> None:
+        reg = obs_metrics.active()
+        rows_total = max(int(self.list_rows.sum()), 1)
+        heat_total = float(self.heat.heat.sum())
+        for name, (nlists, nrows) in occ.items():
+            reg.gauge("tiered_rows", "rows per placement tier",
+                      labelnames=("tier",)).labels(tier=name).set(nrows)
+            reg.gauge("tiered_lists", "IVF lists per placement tier",
+                      labelnames=("tier",)).labels(tier=name).set(nlists)
+            if heat_total > 0.0:
+                tiers_np = np.asarray(self.list_tier)
+                share = float(self.heat.heat[
+                    tiers_np == {"hot": TIER_HOT, "warm": TIER_WARM,
+                                 "cold": TIER_COLD}[name]].sum()) / heat_total
+                # heat share vs row share: >1 for hot tiers means the
+                # placement concentrates traffic onto few rows — the
+                # adaptive win the policy is chasing
+                row_share = occ[name][1] / rows_total
+                reg.histogram(
+                    "tiered_heat_row_ratio",
+                    "per-tier EMA-heat share over row share",
+                    labelnames=("tier",),
+                    buckets=(0.1, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0),
+                ).labels(tier=name).observe(
+                    share / row_share if row_share > 0 else 0.0)
+        for (src, dst), rows in moves.items():
+            reg.counter("tiered_migrations_total",
+                        "rows migrated between placement tiers",
+                        labelnames=("transition",)).labels(
+                            transition=f"{src}->{dst}").inc(rows)
+        if trace.active() is not None:
+            trace.event("index.rebalance_tiers", track="index",
+                        generation=self.generation,
+                        moved_rows=sum(moves.values()),
+                        **{f"rows_{n}": r for n, (_, r) in occ.items()})
+
+    # ----------------------------------------------------- device arrays
+
+    def _dev(self) -> dict:
+        """Per-generation device cache of the placement gathers the front
+        wrapper needs (same pattern as ``StreamingIndex._dev``)."""
+        if self._dev_cache is None or \
+                self._dev_cache["gen"] != self.generation:
+            self._dev_cache = {
+                "gen": self.generation,
+                "row_tier": jnp.asarray(self.list_tier[self.row_list]),
+                "row_list": jnp.asarray(self.row_list),
+            }
+        return self._dev_cache
+
+
+# ------------------------------------------------------------- front stage
+
+
+@partial(jax.jit, static_argnames=("nlist",))
+def _tier_annotate(ids, valid, row_tier, row_list, *, nlist: int):
+    """Per-candidate tier codes + the per-list access histogram (the heat
+    signal), one gather + one scatter-add per micro-batch.  Padded and
+    invalid candidate slots contribute nothing."""
+    tier = row_tier[ids]
+    hot = valid & (tier == TIER_HOT)
+    cold = valid & (tier == TIER_COLD)
+    heat = jnp.zeros((nlist,), jnp.int32).at[row_list[ids]].add(
+        valid.astype(jnp.int32))
+    counters: Counters = {"hot_cand": jnp.sum(hot),
+                          "cold_cand": jnp.sum(cold),
+                          "list_heat": heat}
+    return tier, counters
+
+
+@dataclass
+class TieredFrontStage:
+    """Wraps any registered front stage with placement annotation.
+
+    The inner front's candidate generation, scoring and cost fold are
+    untouched — this stage only gathers per-candidate tier codes and emits
+    the ``hot_cand``/``cold_cand``/``list_heat`` counters the executor's
+    tier routing and the heat tracker consume."""
+
+    inner: object
+    row_tier: jax.Array
+    row_list: jax.Array
+    nlist: int
+
+    def __post_init__(self):
+        self.name = self.inner.name
+
+    def candidates(self, queries: jax.Array,
+                   qvalid: jax.Array | None = None) -> Candidates:
+        cand = self.inner.candidates(queries, qvalid)
+        tier, counters = _tier_annotate(cand.ids, cand.valid, self.row_tier,
+                                        self.row_list, nlist=self.nlist)
+        return cand._replace(tier=tier,
+                             counters={**cand.counters, **counters})
+
+    def fold_cost(self, cost: QueryCost, counts: dict[str, int],
+                  layout: RecordLayout) -> None:
+        self.inner.fold_cost(cost, counts, layout)
+
+
+# ----------------------------------------------------- registry integration
+# Both fronts declare tiered support in ``anns.stages``; the factories wrap
+# the STATIC stage builders — ``TieredIndex`` quacks like ``FaTRQIndex``,
+# so the inner stages bind the wrapped index's arrays directly.
+
+
+def _wrap_front(ti: TieredIndex, inner) -> TieredFrontStage:
+    dev = ti._dev()
+    return TieredFrontStage(inner=inner, row_tier=dev["row_tier"],
+                            row_list=dev["row_list"],
+                            nlist=int(ti.config.nlist))
+
+
+def make_tiered_ivf_front(ti: TieredIndex, **opts) -> TieredFrontStage:
+    return _wrap_front(ti, make_ivf_front(ti, **opts))
+
+
+def make_tiered_graph_front(ti: TieredIndex, **opts) -> TieredFrontStage:
+    return _wrap_front(ti, make_graph_front(ti, **opts))
+
+
+registry.add_front_factory("ivf", "tiered", make_tiered_ivf_front)
+registry.add_front_factory("graph", "tiered", make_tiered_graph_front)

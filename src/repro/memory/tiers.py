@@ -14,6 +14,25 @@ accesses); ``QueryCost.total_seconds`` folds them with the tier model,
 assuming accesses within a stage pipeline/overlap up to the tier's queue
 parallelism (SSD QD, CXL banks), which is how the paper's accelerator and
 the baseline's io_uring path both behave.
+
+Billing-key convention
+----------------------
+Ledger keys are ``"stage:tier"`` with the tier always last (split with
+``key.rsplit(":", 1)``); ``record(stage, tier, ...)`` builds them, nothing
+else should.  The stage names in use:
+
+  ``front:hbm``    device-side coarse stage (PQ scan / graph walk)
+  ``handoff:cxl``  candidate ids+d0 crossing from device to far memory
+  ``refine:cxl``   TRQ residual levels streamed from CXL (warm lists)
+  ``delta:cxl``    streaming-index delta-page share of refine traffic
+  ``hot:hbm``      full-precision rows of HBM-resident hot lists (tiered
+                   layout: exact scoring, refinement skipped)
+  ``cold:ssd``     residual levels of SSD-demoted cold lists (tiered
+                   layout: level-0 and deeper levels at SSD rates)
+  ``rerank:ssd``   exact full-vector fetches for final rerank
+
+Consumers should not string-parse keys — use ``QueryCost.by_tier()`` for
+per-tier totals and ``breakdown()`` for per-tier seconds.
 """
 
 from __future__ import annotations
@@ -139,6 +158,16 @@ class QueryCost:
     def breakdown(self) -> dict[str, float]:
         out = {t.value: self.tier_seconds(t) for t in Tier}
         out["compute"] = self.compute_s
+        return out
+
+    def by_tier(self) -> dict[Tier, Traffic]:
+        """Pooled traffic per tier (every tier present, zero if untouched),
+        so consumers aggregate by tier without parsing ledger keys."""
+        out = {t: Traffic() for t in Tier}
+        for key, t in self.ledger.items():
+            tier = Tier(key.rsplit(":", 1)[-1])
+            out[tier].accesses += t.accesses
+            out[tier].bytes += t.bytes
         return out
 
     def merge(self, other: "QueryCost") -> "QueryCost":

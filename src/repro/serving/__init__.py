@@ -1,10 +1,10 @@
 from repro.serving.cache import CacheStats, ResultCache, query_key
-from repro.serving.engine import Engine, RagResult, Retriever, rag_answer
-from repro.serving.scheduler import (Request, Response, ServingEngine,
+from repro.serving.scheduler import (Engine, RagResult, Request, Response,
+                                     Retriever, ServeStats, ServingEngine,
                                      ServingStats, TenantQoS, TokenBucket,
-                                     VirtualClock)
+                                     VirtualClock, rag_answer)
 
-__all__ = ["Engine", "RagResult", "Retriever", "rag_answer",
+__all__ = ["Engine", "RagResult", "Retriever", "ServeStats", "rag_answer",
            "Request", "Response", "ServingEngine", "ServingStats",
            "TenantQoS", "TokenBucket", "VirtualClock",
            "CacheStats", "ResultCache", "query_key"]

@@ -141,7 +141,8 @@ class ResultCache:
 
     def attach(self, index) -> None:
         """Subscribe to ``index`` mutations when it publishes a generation
-        hook (``StreamingIndex``); immutable layouts need no hook."""
+        hook (``StreamingIndex``, ``TieredIndex``); immutable layouts
+        need no hook."""
         hook = getattr(index, "add_generation_hook", None)
         if hook is not None:
             hook(self._on_mutation)

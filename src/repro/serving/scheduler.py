@@ -59,19 +59,24 @@ import contextlib
 import dataclasses
 import math
 from dataclasses import dataclass, field
+from typing import NamedTuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.anns.api import Database, QueryPlan
+from repro.anns.api import Database, QueryPlan, SearchResult
 from repro.anns.executor import bucket_for, pad_chunk
+from repro.anns.pipeline import FaTRQIndex
 from repro.memory.tiers import QueryCost, Tier
+from repro.models.model_zoo import ModelApi
 from repro.obs import metrics as obs_metrics, trace
 from repro.obs.metrics import MetricsRegistry
 from repro.serving.cache import ResultCache, query_key
 
 __all__ = ["Request", "Response", "TenantQoS", "TokenBucket",
-           "VirtualClock", "ServingEngine", "ServingStats"]
+           "VirtualClock", "ServingEngine", "ServingStats",
+           "Engine", "ServeStats", "Retriever", "RagResult", "rag_answer"]
 
 
 @dataclass(frozen=True)
@@ -566,3 +571,192 @@ class ServingEngine:
                         arrival_us=now, rid=self._fresh_rid())
                 for i in range(queries.shape[0])]
         return self.run(reqs)
+
+
+# ----------------------------------------------------------- RAG serving
+# The LM-facing half of the serving layer (formerly ``serving.engine``,
+# absorbed here so the package has ONE serving entry point): a minimal
+# batched decode engine, the planned ``Retriever`` wrapper over
+# ``Database``, and the ``rag_answer`` round-trip coupling the two
+# (paper Fig. 1: embed prompt → ANNS → feed retrieved context to the LM).
+
+
+@dataclass
+class ServeStats:
+    steps: int = 0
+    tokens: int = 0
+    retrievals: int = 0
+
+
+class Engine:
+    """Minimal batched decode engine (greedy)."""
+
+    def __init__(self, api: ModelApi, params, *, batch: int, max_len: int,
+                 dtype=jnp.float32):
+        self.api = api
+        self.params = params
+        self.batch = batch
+        self.max_len = max_len
+        self.cache = api.init_cache(params, batch, max_len, dtype)
+        self.stats = ServeStats()
+
+    def prefill(self, batch_inputs: dict) -> None:
+        if self.api.prefill is not None:
+            self.cache = self.api.prefill(self.params, batch_inputs,
+                                          self.cache)
+
+    def decode(self, tokens: jax.Array, steps: int) -> jax.Array:
+        """tokens (B, 1) seed; returns (B, steps) greedy continuations."""
+        out = []
+        cur = tokens
+        for _ in range(steps):
+            logits, self.cache = self.api.decode_step(self.params, cur,
+                                                      self.cache)
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out.append(cur[:, 0])
+            self.stats.steps += 1
+            self.stats.tokens += self.batch
+        return jnp.stack(out, axis=1)
+
+
+@dataclass
+class Retriever:
+    """Serving-side wrapper over the ``anns.api.Database`` handle: one
+    default ``QueryPlan`` + a running traffic ledger.
+
+    ``total_cost`` accumulates traffic across requests (capacity-planning
+    view); each ``retrieve`` also returns the per-call QueryCost.
+
+    The per-field knobs (``front``/``backend``/``micro_batch``/``shards``)
+    are the legacy surface and become the default plan; pass ``plan=`` to
+    override them wholesale.  Both registered fronts (IVF and graph) run
+    on every index layout; the plan is still validated once against the
+    capability registry (invalid plans — unknown names, a shard count or
+    front mismatching a wrapped ``ShardedIndex`` — raise ``anns.PlanError``
+    at plan time) and compiled once into an executor cached per (index
+    generation, plan): repeated ``retrieve`` calls reuse it, and a
+    ``StreamingIndex``'s ``insert``/``delete``/``compact``/``rebalance``
+    generation bumps invalidate it, including the sharded snapshot behind
+    ``shards=S``.
+
+    ``index`` may be a ``FaTRQIndex``, ``ShardedIndex``, ``StreamingIndex``
+    or ``TieredIndex`` (or a ready ``Database``): streaming retrieval
+    returns stable global ids across compactions and bills delta-list
+    traffic to the running ledger's distinct ``delta:cxl`` entry; sharded
+    retrieval arrives pre-folded under the parallel-shard model (max time
+    across shards, summed bytes); tiered retrieval bills hot/cold
+    placement traffic to ``hot:hbm``/``cold:ssd`` and its
+    ``rebalance_tiers()`` generation bumps invalidate cached executors
+    exactly like streaming mutations do.
+    """
+
+    index: "FaTRQIndex | StreamingIndex | Database"    # noqa: F821
+    front: str = "ivf"
+    backend: str = "reference"
+    micro_batch: int | None = 8
+    shards: int | None = None
+    plan: QueryPlan | None = None
+    bucket: bool = True
+    total_cost: QueryCost = field(default_factory=QueryCost)
+
+    @property
+    def db(self) -> Database:
+        return Database.wrap(self.index)
+
+    def default_plan(self) -> QueryPlan:
+        if self.plan is not None:
+            return self.plan
+        return QueryPlan(front=self.front, backend=self.backend,
+                         shards=self.shards, micro_batch=self.micro_batch)
+
+    def retrieve(self, queries: jax.Array, *, k: int,
+                 micro_batch: int | None = None
+                 ) -> tuple[jax.Array, QueryCost]:
+        """Legacy tuple surface: (Q, k) ids + per-call ledger.
+        ``micro_batch`` overrides the plan's batching for this call."""
+        res = self.query(queries, k=k, micro_batch=micro_batch)
+        return res.ids, res.cost
+
+    def query(self, queries: jax.Array, *, k: int,
+              micro_batch: int | None = None) -> SearchResult:
+        """Planned retrieval → ``SearchResult`` (ids, exact distances,
+        ledger, resolved plan); folds the call into ``total_cost``.
+
+        With ``bucket=True`` (the default) ragged trailing chunks pad to
+        the smallest compiled power-of-two bucket ≤ the micro-batch and
+        mask the padding with ``qvalid`` — so serving a stream of varying
+        batch sizes reuses the handful of bucket traces instead of
+        compiling one per distinct remainder (padded rows contribute
+        neither candidates nor ledger traffic; results are bit-identical
+        to the unpadded path)."""
+        res = self.db.query(queries, plan=self.default_plan(), k=k,
+                            micro_batch=micro_batch, bucket=self.bucket)
+        self.total_cost.merge(res.cost)
+        return res
+
+
+class RagResult(NamedTuple):
+    """The full RAG round-trip output: generated tokens, retrieved ids,
+    the retrieval traffic ledger, and whether QoS throttling degraded any
+    of the batch's retrievals (always False outside a ``ServingEngine``)."""
+
+    tokens: jax.Array     # (B, decode_steps) greedy continuations
+    ids: jax.Array        # (B, k) retrieved context ids
+    cost: QueryCost       # retrieval ledger for this call
+    degraded: bool        # any retrieval ran under a degraded QoS plan
+
+
+def rag_answer(engine: Engine, index: FaTRQIndex, embed_fn, prompt_tokens,
+               *, k: int = 5, decode_steps: int = 8,
+               retriever: Retriever | None = None, micro_batch: int = 8,
+               plan: QueryPlan | None = None,
+               serving=None) -> RagResult:
+    """One RAG round-trip: embed the prompt, FaTRQ-retrieve top-k context
+    ids through the planned ``Database`` datapath (micro-batched), prepend
+    them (stub tokenization: ids mod vocab), decode.
+
+    ``plan`` threads the caller's full ``QueryPlan`` (shards, backend,
+    refine budget, ...) into the default retriever — previously a default
+    ``Retriever`` was constructed that silently ignored any such
+    configuration.  Pass ``retriever`` instead to keep a running ledger
+    across calls, or ``serving`` (a ``ServingEngine``) to route retrieval
+    through the continuous-batching scheduler — QoS degradation and cache
+    hits then surface in the returned ``RagResult`` (``degraded`` flag;
+    cache hits contribute no ledger traffic).  The three are mutually
+    exclusive.
+
+    Returns a ``RagResult`` named tuple — the retrieval ``QueryCost`` and
+    the ``degraded`` flag ride along with tokens and ids, so callers
+    (e.g. ``launch.serve``) can bill retrieval traffic per request
+    without reaching into retriever internals."""
+    q = embed_fn(prompt_tokens)                       # (B, D) embeddings
+    if serving is not None:
+        if retriever is not None or plan is not None:
+            raise ValueError("pass serving= alone — a ServingEngine "
+                             "carries its own plan and QoS config")
+        resp = serving.serve(q, k=k)
+        ids = jnp.asarray(np.stack([r.ids for r in resp]))
+        cost = QueryCost()
+        seen_batches = set()
+        for r in resp:
+            if r.cost is not None and r.batch not in seen_batches:
+                seen_batches.add(r.batch)
+                cost.merge(r.cost)
+        degraded = any(r.degraded for r in resp)
+    else:
+        if retriever is None:
+            if plan is not None and plan.micro_batch is None:
+                plan = dataclasses.replace(plan, micro_batch=micro_batch)
+            retriever = Retriever(index=index, micro_batch=micro_batch,
+                                  plan=plan)
+        elif plan is not None:
+            raise ValueError("pass plan= or retriever=, not both — a "
+                             "Retriever carries its own plan")
+        ids, cost = retriever.retrieve(q, k=k)
+        degraded = False
+    engine.stats.retrievals += q.shape[0]
+    # stub contextualization: retrieved ids become context tokens
+    ctx = (ids % engine.api.cfg.vocab).astype(jnp.int32)
+    seed = jnp.concatenate([ctx, prompt_tokens], axis=1)[:, -1:]
+    gen = engine.decode(seed, decode_steps)
+    return RagResult(tokens=gen, ids=ids, cost=cost, degraded=degraded)

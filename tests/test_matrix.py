@@ -17,7 +17,8 @@ import numpy as np
 import pytest
 
 from repro.anns import (Database, PipelineConfig, QueryPlan, StreamingConfig,
-                        StreamingIndex, build, registry)
+                        StreamingIndex, TieredConfig, TieredIndex, build,
+                        registry)
 from repro.obs import trace
 
 
@@ -41,6 +42,18 @@ def streaming(index):
 
 
 @pytest.fixture(scope="module")
+def tiered(ds, index):
+    """Tiered layout with ACTIVE hot/cold placement: heat one query batch,
+    then rebalance so the hot-scoring and cold-billing paths actually run
+    (an all-warm placement would reduce this sweep to the static path)."""
+    ti = TieredIndex(index, TieredConfig(hot_rows_frac=0.25,
+                                         cold_rows_frac=0.25))
+    Database.wrap(ti).query(ds.queries, plan=QueryPlan(front="ivf", k=5))
+    assert ti.rebalance_tiers()["changed"]
+    return ti
+
+
+@pytest.fixture(scope="module")
 def index_ml(ds):
     """Multi-level TRQ index: exercises the fused kernel's level loop."""
     cfg = PipelineConfig(dim=32, pq_m=4, pq_k=32, nlist=16, nprobe=4,
@@ -58,6 +71,18 @@ def streaming_ml(ds):
     st = StreamingIndex(base, StreamingConfig(auto_compact=False))
     st.insert(ds.x[1200:])
     return st
+
+
+@pytest.fixture(scope="module")
+def tiered_ml(ds, index_ml):
+    """Multi-level tiered placement with live hot AND cold lists, so
+    backend parity covers the per-level cold-split counters (the tiered
+    reuse of the is_delta marking mechanism) in both backends."""
+    ti = TieredIndex(index_ml, TieredConfig(hot_rows_frac=0.25,
+                                            cold_rows_frac=0.25))
+    Database.wrap(ti).query(ds.queries, plan=QueryPlan(front="ivf", k=5))
+    assert ti.rebalance_tiers()["changed"]
+    return ti
 
 
 def _ledger_dict(cost):
@@ -79,12 +104,14 @@ def test_matrix_is_closed():
 
 
 @pytest.mark.parametrize("front,layout,backend", _triples())
-def test_every_triple_plans_and_runs(ds, index, streaming, front, layout,
-                                     backend):
+def test_every_triple_plans_and_runs(ds, index, streaming, tiered, front,
+                                     layout, backend):
     if layout == "streaming":
         db, shards = Database.wrap(streaming), None
     elif layout == "sharded":
         db, shards = Database.wrap(index), 1
+    elif layout == "tiered":
+        db, shards = Database.wrap(tiered), None
     else:
         db, shards = Database.wrap(index), None
     plan = QueryPlan(front=front, backend=backend, shards=shards, k=5)
@@ -102,7 +129,7 @@ def test_every_triple_plans_and_runs(ds, index, streaming, front, layout,
                          list(itertools.product(registry.front_names(),
                                                 registry.LAYOUTS)))
 def test_backend_parity_every_front_layout(ds, index_ml, streaming_ml,
-                                           front, layout):
+                                           tiered_ml, front, layout):
     """The pallas (fused persistent kernel) and reference backends must
     return bit-identical ids and identical per-entry ledger accesses/bytes
     on every front × layout, with multi-level TRQ (2/4/8-shard parity is
@@ -111,6 +138,8 @@ def test_backend_parity_every_front_layout(ds, index_ml, streaming_ml,
         db, shards = Database.wrap(streaming_ml), None
     elif layout == "sharded":
         db, shards = Database.wrap(index_ml), 1
+    elif layout == "tiered":
+        db, shards = Database.wrap(tiered_ml), None
     else:
         db, shards = Database.wrap(index_ml), None
     results = {}
@@ -123,13 +152,16 @@ def test_backend_parity_every_front_layout(ds, index_ml, streaming_ml,
 
 
 # ledger stage-key prefix → the datapath stage span that billed it
+# (hot:hbm is scored inside the rerank span; cold:ssd bills the refine
+# path's residual stream at SSD rates)
 _STAGE_OF = {"coarse": "front", "front": "front", "handoff": "refine",
-             "refine": "refine", "delta": "refine", "rerank": "rerank"}
+             "refine": "refine", "delta": "refine", "hot": "rerank",
+             "cold": "refine", "rerank": "rerank"}
 
 
 @pytest.mark.parametrize("front,layout,backend", _triples())
-def test_ledger_span_coverage_every_triple(ds, index, streaming, front,
-                                           layout, backend):
+def test_ledger_span_coverage_every_triple(ds, index, streaming, tiered,
+                                           front, layout, backend):
     """Observability invariant over the full matrix: with a tracer
     active, every executed stage emitted ≥1 span AND ≥1 ledger entry,
     and the two views map onto each other — a new ledger stage key
@@ -139,6 +171,8 @@ def test_ledger_span_coverage_every_triple(ds, index, streaming, front,
         db, shards = Database.wrap(streaming), None
     elif layout == "sharded":
         db, shards = Database.wrap(index), 1
+    elif layout == "tiered":
+        db, shards = Database.wrap(tiered), None
     else:
         db, shards = Database.wrap(index), None
     plan = QueryPlan(front=front, backend=backend, shards=shards, k=5)

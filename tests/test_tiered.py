@@ -1,0 +1,271 @@
+"""Adaptive hot/cold tiered placement (``memory.placement`` +
+``anns.tiered``).
+
+Pins the three contracts the tiered layout makes:
+
+1. **All-warm identity** — a ``TieredIndex`` that has never rebalanced is
+   bit-identical to the wrapped static index on every front × backend:
+   same ids, same distances, same per-entry ledger bytes.
+2. **Policy pays off under skew** — replaying a seeded Zipfian trace,
+   rebalancing drops the modeled ``total_seconds()`` versus the all-warm
+   placement without losing recall.
+3. **Migration invalidates** — ``rebalance_tiers()`` bumps the generation
+   so both the executor cache and the serving result cache drop stale
+   entries (on both refine backends).
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.anns import (Database, PipelineConfig, PlanError, QueryPlan,
+                        TieredConfig, TieredIndex, build, make_executor,
+                        recall_at_k, registry)
+from repro.data.synthetic import brute_force_topk
+from repro.memory import (TIER_COLD, TIER_HOT, TIER_WARM, HeatTracker,
+                          QueryCost, Tier, occupancy, plan_migration,
+                          plan_placement)
+from repro.serving import ResultCache, query_key
+
+
+# ---------------------------------------------------------------------------
+# policy unit tests (pure numpy, no device)
+
+def test_tiered_config_validation():
+    with pytest.raises(ValueError, match="decay"):
+        TieredConfig(decay=1.0)
+    with pytest.raises(ValueError, match=">= 0"):
+        TieredConfig(hot_rows_frac=-0.1)
+    with pytest.raises(ValueError, match="<= 1"):
+        TieredConfig(hot_rows_frac=0.7, cold_rows_frac=0.7)
+
+
+def test_heat_tracker_ema_is_deterministic():
+    ht = HeatTracker(4, decay=0.5)
+    ht.observe([8, 0, 4, 0])
+    np.testing.assert_allclose(ht.heat, [4.0, 0.0, 2.0, 0.0])
+    ht.observe([0, 8, 4, 0])
+    np.testing.assert_allclose(ht.heat, [2.0, 4.0, 3.0, 0.0])
+    assert ht.observations == 2
+    ht.reset()
+    assert ht.observations == 0 and not ht.heat.any()
+    with pytest.raises(ValueError, match="shape"):
+        ht.observe(np.zeros(5))
+
+
+def test_plan_placement_budgets_and_ties():
+    rows = np.full(4, 10)
+    # ties broken by list id asc; hot budget 0.5*40=20 rows → lists 0, 1
+    tiers = plan_placement([5.0, 5.0, 1.0, 0.0], rows,
+                           TieredConfig(hot_rows_frac=0.5,
+                                        cold_rows_frac=0.25))
+    assert tiers.tolist() == [TIER_HOT, TIER_HOT, TIER_WARM, TIER_COLD]
+    assert tiers.dtype == np.int8
+
+
+def test_plan_placement_never_promotes_unobserved():
+    tiers = plan_placement(np.zeros(4), np.full(4, 10),
+                           TieredConfig(hot_rows_frac=1.0))
+    assert (tiers == TIER_WARM).all()
+
+
+def test_plan_placement_disabled_is_all_warm():
+    tiers = plan_placement([9.0, 1.0], [10, 10],
+                           TieredConfig(hot_rows_frac=1.0,
+                                        cold_rows_frac=0.0, enabled=False))
+    assert (tiers == TIER_WARM).all()
+
+
+def test_plan_migration_and_occupancy():
+    rows = np.full(4, 10)
+    old = np.full(4, TIER_WARM, np.int8)
+    new = np.array([TIER_HOT, TIER_HOT, TIER_WARM, TIER_COLD], np.int8)
+    assert plan_migration(old, new, rows) == {("warm", "hot"): 20,
+                                              ("warm", "cold"): 10}
+    assert plan_migration(new, new, rows) == {}
+    assert occupancy(new, rows) == {"hot": (2, 20), "warm": (1, 10),
+                                    "cold": (1, 10)}
+
+
+def test_query_cost_by_tier_pools_stage_keys():
+    cost = QueryCost()
+    cost.record("refine", Tier.CXL, 10, 8)
+    cost.record("delta", Tier.CXL, 5, 8)
+    cost.record("hot", Tier.HBM, 3, 128)
+    by = cost.by_tier()
+    assert by[Tier.CXL].accesses == 15
+    assert by[Tier.CXL].bytes == 15 * 64          # CXL min_grain 64B
+    assert by[Tier.HBM].accesses == 3
+    assert by[Tier.SSD].accesses == 0             # untouched tiers present
+    assert set(by) == set(Tier)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end fixtures
+
+@pytest.fixture(scope="module")
+def ds():
+    from repro.data import make_dataset
+    return make_dataset(jax.random.PRNGKey(0), n=1500, d=32, n_queries=6,
+                        k_gt=20, clusters=8)
+
+
+@pytest.fixture(scope="module")
+def index(ds):
+    cfg = PipelineConfig(dim=32, pq_m=4, pq_k=32, nlist=16, nprobe=4,
+                         final_k=5, refine_budget=20, trq_levels=2)
+    return build(jax.random.PRNGKey(1), ds.x, cfg)
+
+
+@pytest.fixture(scope="module")
+def skewed_queries(ds):
+    """Seeded Zipfian trace: anchor rows ranked by distance to one point,
+    query popularity ∝ rank^-1.3 — a handful of IVF lists absorb almost
+    all probes, the regime adaptive placement is built for."""
+    x = np.asarray(ds.x)
+    near = np.argsort(((x - x[0]) ** 2).sum(axis=1))
+    rng = np.random.default_rng(11)
+    p = 1.0 / np.arange(1, len(near) + 1, dtype=np.float64) ** 1.3
+    rows = near[rng.choice(len(near), size=48, p=p / p.sum())]
+    q = x[rows] + 0.02 * rng.standard_normal((48, x.shape[1]))
+    q = (q / np.linalg.norm(q, axis=1, keepdims=True)).astype(np.float32)
+    return jnp.asarray(q)
+
+
+def _ledger_dict(cost):
+    return {k: (t.accesses, t.bytes) for k, t in cost.ledger.items()}
+
+
+# ---------------------------------------------------------------------------
+# contract 1: all-warm ≡ static, bit for bit, across the matrix
+
+@pytest.mark.parametrize("front,backend",
+                         list(itertools.product(registry.front_names(),
+                                                registry.backend_names())))
+def test_all_warm_matches_static_bitwise(ds, index, front, backend):
+    ti = TieredIndex(index)                       # never rebalanced
+    assert (ti.list_tier == TIER_WARM).all() and ti.generation == 0
+    plan = QueryPlan(front=front, backend=backend, k=5)
+    a = Database.wrap(index).query(ds.queries, plan=plan)
+    b = Database.wrap(ti).query(ds.queries, plan=plan)
+    assert jnp.array_equal(a.ids, b.ids)
+    assert jnp.array_equal(a.distances, b.distances)
+    assert _ledger_dict(a.cost) == _ledger_dict(b.cost)
+
+
+# ---------------------------------------------------------------------------
+# contract 2: Zipfian trace → cost drops, recall does not
+
+def test_policy_beats_all_warm_under_zipfian_skew(ds, index, skewed_queries):
+    ti = TieredIndex(index, TieredConfig(decay=0.5, hot_rows_frac=0.25,
+                                         cold_rows_frac=0.2))
+    db = Database.wrap(ti)
+    plan = QueryPlan(front="ivf", k=5)
+    warm = db.query(skewed_queries, plan=plan)    # builds heat as it runs
+    out = ti.rebalance_tiers()
+    assert out["changed"] and out["occupancy"]["hot"][0] > 0
+    hot = db.query(skewed_queries, plan=plan)
+
+    gt = brute_force_topk(ds.x, skewed_queries, 20)
+    r_warm = recall_at_k(warm.ids, gt, 5)
+    r_hot = recall_at_k(hot.ids, gt, 5)
+    assert r_hot >= r_warm                        # exact HBM scoring ≥ TRQ
+    assert "hot:hbm" in hot.cost.ledger
+    assert hot.cost.total_seconds() < warm.cost.total_seconds()
+
+
+def test_rebalance_gated_by_min_observations(ds, index):
+    ti = TieredIndex(index, TieredConfig(hot_rows_frac=0.25,
+                                         min_observations=99))
+    Database.wrap(ti).query(ds.queries, plan=QueryPlan(front="ivf", k=5))
+    out = ti.rebalance_tiers()
+    assert not out["changed"] and ti.generation == 0
+    out = ti.rebalance_tiers(force=True)          # explicit override
+    assert out["changed"] and ti.generation == 1
+
+
+# ---------------------------------------------------------------------------
+# contract 3: migration invalidates executor + result caches (both backends)
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_rebalance_invalidates_executor_cache(ds, index, backend):
+    ti = TieredIndex(index, TieredConfig(hot_rows_frac=0.25,
+                                         cold_rows_frac=0.25))
+    ex0 = make_executor(ti, front="ivf", backend=backend, layout="tiered")
+    assert make_executor(ti, front="ivf", backend=backend,
+                         layout="tiered") is ex0          # memoized
+    Database.wrap(ti).query(ds.queries,
+                            plan=QueryPlan(front="ivf", backend=backend, k=5))
+    assert ti.rebalance_tiers()["changed"]
+    ex1 = make_executor(ti, front="ivf", backend=backend, layout="tiered")
+    assert ex1 is not ex0
+    # stale-generation entries are pruned, not retained forever
+    assert all(k[0] == ti.generation for k in ti._executor_cache)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_rebalance_invalidates_result_cache(ds, index, backend):
+    ti = TieredIndex(index, TieredConfig(hot_rows_frac=0.25,
+                                         cold_rows_frac=0.25))
+    db = Database.wrap(ti)
+    plan = db.validate(QueryPlan(front="ivf", backend=backend, k=5))
+    res = db.query(ds.queries, plan=plan)
+    rc = ResultCache()
+    rc.attach(ti)                                 # generation hook
+    qk = query_key(ds.queries[0])
+    rc.insert(qk, plan, ti.generation, np.asarray(res.ids[0]),
+              np.asarray(res.distances[0]))
+    assert rc.lookup(qk, plan, ti.generation) is not None
+    assert ti.rebalance_tiers()["changed"]
+    assert rc.lookup(qk, plan, ti.generation) is None
+    assert rc.stats.invalidations == 1
+
+
+def test_rebalance_noop_keeps_generation(ds, index):
+    ti = TieredIndex(index, TieredConfig(hot_rows_frac=0.25))
+    Database.wrap(ti).query(ds.queries, plan=QueryPlan(front="ivf", k=5))
+    assert ti.rebalance_tiers()["changed"]
+    gen = ti.generation
+    out = ti.rebalance_tiers()                    # same heat → same placement
+    assert not out["changed"] and ti.generation == gen
+
+
+# ---------------------------------------------------------------------------
+# plan-time errors
+
+def test_tiered_rejects_shards_with_guidance(ds, index):
+    db = Database.wrap(TieredIndex(index))
+    with pytest.raises(PlanError, match="tiered.*per-device"):
+        db.validate(QueryPlan(front="ivf", shards=2, k=5))
+
+
+def test_tiered_rejects_baseline_mode(ds, index):
+    db = Database.wrap(TieredIndex(index))
+    with pytest.raises(PlanError, match="baseline"):
+        db.validate(QueryPlan(front="ivf", mode="baseline", k=5))
+
+
+def test_pair_error_names_tiered_alternatives():
+    msg = str(registry._pair_error("front", "flat", ("static",), "tiered"))
+    # the error must steer the caller to what DOES run on tiered
+    assert "'tiered'" in msg and "ivf" in msg and "graph" in msg
+    assert "[static]" in msg
+
+
+def test_hot_path_excludes_hot_rows_from_ssd_rerank(ds, index,
+                                                    skewed_queries):
+    """Hot candidates are scored from HBM: the SSD rerank ledger must
+    shrink by exactly the fetches that went hot, not just get relabeled."""
+    ti = TieredIndex(index, TieredConfig(decay=0.5, hot_rows_frac=0.25))
+    db = Database.wrap(ti)
+    plan = QueryPlan(front="ivf", k=5)
+    warm = db.query(skewed_queries, plan=plan)
+    assert ti.rebalance_tiers()["changed"]
+    hot = db.query(skewed_queries, plan=plan)
+    assert hot.cost.ledger["rerank:ssd"].accesses \
+        < warm.cost.ledger["rerank:ssd"].accesses
+    by = hot.cost.by_tier()
+    assert by[Tier.HBM].accesses > warm.cost.by_tier()[Tier.HBM].accesses
